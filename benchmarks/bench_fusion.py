@@ -1,0 +1,49 @@
+"""Paper Fig. 18: BLI (+) conv fusion effect on energy.
+
+Fusion keeps the deformed-feature intermediate (K*K x input) on-chip.
+We compute DRAM traffic with/without fusion over the measured TDTs for
+each network config and report the energy reduction; the paper's headline
+— >20% on */-F with DCN-II — is printed against ours. The fusion planner
+(repro.core.fusion) additionally reports the per-layer VMEM working sets
+that make the fusion legal on the paper's 128KB+256KB buffers.
+"""
+
+from __future__ import annotations
+
+from repro.core.fusion import plan_fusion
+from repro.core.simulator import dram_energy, simulate_strategies
+from repro.models.dcn_models import DcnNetConfig, layer_shapes
+
+from benchmarks.workloads import NETWORKS, measured_tdt, net_label
+
+BUF_BYTES = 128 * 1024
+ONCHIP_BUDGET = (128 + 256) * 1024  # input + output buffers, Table I
+
+
+def run(csv=print):
+    B, pp, grid = measured_tdt()
+    for name, nd in NETWORKS:
+        kw = dict(in_grid=grid, channels=256, c_out=256, kernel_size=3,
+                  buffer_bytes=BUF_BYTES)
+        fused = simulate_strategies(B, pp, fused=True, **kw)["scheduled"]
+        staged = simulate_strategies(B, pp, fused=False, **kw)["scheduled"]
+        w = {3: 0.12, 8: 0.45, -1: 1.0}[nd]
+        e_f = dram_energy(fused, 1e-3)
+        e_s = dram_energy(staged, 1e-3)
+        # blend: only the deformable fraction of the network fuses
+        red = w * (1 - e_f / e_s)
+        csv(f"fig18_fusion,{net_label(name, nd)},"
+            f"energy_reduction={100*red:.1f}%"
+            + (",paper=>20%" if nd < 0 else ""))
+
+    # fusion-planner legality on the paper's buffer budget
+    cfg = DcnNetConfig(name="vgg19", n_deform=-1, img_size=224)
+    plans = [plan_fusion(s, ONCHIP_BUDGET) for s in layer_shapes(cfg)]
+    n_fused = sum(p.mode.value == "fused" for p in plans)
+    csv(f"fig18_planner,vgg19-F,layers_fused={n_fused}/{len(plans)},"
+        f"max_vmem_bytes={max(p.vmem_bytes for p in plans)}")
+    return plans
+
+
+if __name__ == "__main__":
+    run()

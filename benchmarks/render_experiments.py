@@ -1,0 +1,106 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts (single source of truth). §Perf prose is hand-written in
+EXPERIMENTS.md; this script prints markdown to splice in.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs
+from benchmarks.roofline import ART_DIR, load_cell, model_flops, roofline_row
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | compile s | args GB/dev | temp GB/dev "
+          "| HLO flops/dev | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in configs.ARCHS:
+        for shape in configs.SHAPES:
+            for mesh in ("pod1", "pod2"):
+                r = load_cell(arch, shape, mesh)
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    if mesh == "pod1":
+                        print(f"| {arch} | {shape} | both | — | — | — | "
+                              f"skip: sub-quadratic required | — |")
+                    continue
+                a = r.get("analysis", {})
+                print(f"| {arch} | {shape} | {mesh} | {r['compile_s']} | "
+                      f"{fmt_bytes(r['memory']['argument_bytes'])} | "
+                      f"{fmt_bytes(r['memory']['temp_bytes'])} | "
+                      f"{a.get('flops', 0):.3g} | "
+                      f"{a.get('collective_bytes', 0)/1e9:.2f} |")
+
+
+def roofline_table(mesh="pod1"):
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in configs.ARCHS:
+        for shape in configs.SHAPES:
+            r = load_cell(arch, shape, mesh)
+            if r is None or r.get("status") != "ok":
+                continue
+            row = roofline_row(r)
+            if row is None:
+                continue
+            print(f"| {arch} | {shape} | {row['compute_s']*1e3:.1f} | "
+                  f"{row['memory_s']*1e3:.0f} | "
+                  f"{row['collective_s']*1e3:.1f} | {row['dominant']} | "
+                  f"{row['model_flops']:.3g} | {row['useful_ratio']:.2f} | "
+                  f"{row['roofline_frac']:.4f} |")
+
+
+def variant_table(arch, shape, mesh, variants):
+    print(f"| variant | flops/dev | traffic GB/dev | coll GB/dev | "
+          f"temp GB/dev | dominant term s | TPU-proj bound s | "
+          f"proj roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = [("baseline", load_cell(arch, shape, mesh))]
+    for v in variants:
+        path = os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}__{v}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                rows.append((v, json.load(f)))
+    for name, r in rows:
+        if r is None or r.get("status") != "ok":
+            print(f"| {name} | FAILED | | | | | | |")
+            continue
+        a = r["analysis"]
+        t_c = a["flops"] / 197e12
+        t_m = a["traffic_bytes"] / 819e9
+        t_x = a["collective_bytes"] / 50e9
+        row = roofline_row(r)
+        proj = max(t_c, row["memory_proj_s"], t_x) if row else 0
+        pf = row["roofline_frac_proj"] if row else 0
+        print(f"| {name} | {a['flops']:.3g} | "
+              f"{a['traffic_bytes']/1e9:.1f} | "
+              f"{a['collective_bytes']/1e9:.2f} | "
+              f"{r['memory']['temp_bytes']/1e9:.1f} | "
+              f"{max(t_c, t_m, t_x):.2f} | {proj:.2f} | {pf:.4f} |")
+
+
+if __name__ == "__main__":
+    print("## §Dry-run\n")
+    dryrun_table()
+    print("\n## §Roofline (single-pod 16x16 = 256 chips)\n")
+    roofline_table()
+    print("\n## §Perf variants\n")
+    for arch, shape, variants in [
+        ("musicgen-medium", "train_4k",
+         ["fsdp", "flashlike", "fsdp,flashlike"]),
+        ("deepseek-v3-671b", "train_4k",
+         ["remat_full", "flashlike", "flashlike,cap1", "remat_full,cap1"]),
+        ("jamba-v0.1-52b", "decode_32k", ["serve_tp"]),
+    ]:
+        print(f"\n### {arch} / {shape}\n")
+        variant_table(arch, shape, "pod1", variants)

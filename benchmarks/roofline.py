@@ -1,0 +1,159 @@
+"""Deliverable (g): three-term roofline per (arch x shape) from the
+compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_chip    / peak_FLOP/s      (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_chip    / HBM_bw           (819 GB/s)
+  collective = coll_bytes_per_chip   / link_bw          (50 GB/s ICI)
+
+Sources: flops/traffic/collective bytes come from the loop-aware HLO
+analysis (repro.launch.hlo_analysis) — ``compiled.cost_analysis`` counts
+while-loop bodies once and would under-report scanned models ~60x; the
+structural analysis multiplies by known_trip_count. All shapes in the
+post-SPMD module are per-device, so the chips term cancels.
+
+MODEL_FLOPS = 6*N*D (train), 2*N*D (prefill), 2*N_active*B (decode step),
+with N_active excluding non-selected experts. The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/capacity/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+from repro.models.params import abstract_params, param_count
+
+PEAK_FLOPS = 197e12     # TPU v5e bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def _n_params(cfg) -> tuple[int, int]:
+    """(N_total, N_active) excluding unselected experts."""
+    n = param_count(abstract_params(lambda mk: lm.init_lm(mk, cfg)))
+    if cfg.moe is None:
+        return n, n
+    per_expert = 3 * cfg.moe.d_model * cfg.moe.d_ff
+    n_moe_layers = (len([s for s in cfg.pattern if s.mlp == "moe"])
+                    * cfg.n_repeats
+                    + len([s for s in cfg.prefix if s.mlp == "moe"]))
+    inactive = (cfg.moe.n_experts_padded - cfg.moe.top_k) * per_expert \
+        * n_moe_layers
+    return n, n - inactive
+
+
+def model_flops(cfg, shape) -> float:
+    n, n_active = _n_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; attention reads add ~2*B*S*kv flops
+    return 2.0 * n_active * shape.global_batch
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> dict | None:
+    path = os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _flash_attn_bytes(cfg, shape, chips) -> float:
+    """Analytic per-chip HBM bytes of attention under the Pallas flash
+    kernel: Q,K,V read + O written, x3 for the backward (dQ,dK,dV + one
+    recompute read), bf16. Replaces the XLA score-chain traffic."""
+    n_attn = (sum(1 for s in cfg.prefix if s.kind in ("attn", "mla"))
+              + cfg.n_repeats * sum(1 for s in cfg.pattern
+                                    if s.kind in ("attn", "mla")))
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq
+    if cfg.mla is not None:
+        per_tok = cfg.mla.n_heads * (cfg.mla.qk_dim * 2 + cfg.mla.d_v * 2)
+    else:
+        per_tok = (cfg.n_heads + 2 * cfg.n_kv_heads + cfg.n_heads) \
+            * cfg.head_dim
+    factor = 3.0 if shape.kind == "train" else 1.0
+    return factor * tokens * per_tok * 2 * n_attn / chips
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "analysis" not in rec:
+        return None
+    a = rec["analysis"]
+    cfg = configs.get_config(rec["arch"])
+    shape = configs.SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    t_c = a["flops"] / PEAK_FLOPS
+    t_m = a["traffic_bytes"] / HBM_BW
+    t_x = a["collective_bytes"] / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(cfg, shape)
+    ratio = mf / max(a["flops"] * chips, 1)
+    bound = max(t_c, t_m, t_x)
+    # roofline fraction: useful-compute time over the bottleneck time
+    frac = (mf / chips / PEAK_FLOPS) / max(bound, 1e-30)
+    # TPU projection: attention score-chain traffic (stack-frame
+    # attributed) is VMEM-resident under the flash kernel.
+    attn = a.get("attn_traffic_bytes", 0.0)
+    t_m_proj = (a["traffic_bytes"] - attn
+                + _flash_attn_bytes(cfg, shape, chips)) / HBM_BW
+    frac_proj = (mf / chips / PEAK_FLOPS) \
+        / max(t_c, t_m_proj, t_x, 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "memory_proj_s": t_m_proj, "roofline_frac_proj": frac_proj,
+        "dominant": dom, "model_flops": mf, "hlo_flops_chip": a["flops"],
+        "useful_ratio": ratio, "roofline_frac": frac,
+        "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "compile_s": rec["compile_s"],
+    }
+
+
+def run(csv=print, mesh: str = "pod1"):
+    rows = []
+    for arch in configs.ARCHS:
+        for shape in configs.SHAPES:
+            rec = load_cell(arch, shape, mesh)
+            if rec is None:
+                continue
+            if rec.get("status") == "skipped":
+                csv(f"roofline,{arch},{shape},{mesh},SKIP,"
+                    f"{rec['reason'][:50]}")
+                continue
+            row = roofline_row(rec)
+            if row is None:
+                csv(f"roofline,{arch},{shape},{mesh},ERROR")
+                continue
+            rows.append(row)
+            csv(f"roofline,{arch},{shape},{mesh},"
+                f"compute={row['compute_s']*1e3:.2f}ms,"
+                f"memory={row['memory_s']*1e3:.2f}ms,"
+                f"collective={row['collective_s']*1e3:.2f}ms,"
+                f"dominant={row['dominant']},"
+                f"useful_ratio={row['useful_ratio']:.2f},"
+                f"roofline_frac={row['roofline_frac']:.3f},"
+                f"tpu_proj_frac={row['roofline_frac_proj']:.3f}")
+    if rows:
+        worst = sorted(rows, key=lambda r: r["roofline_frac"])[:3]
+        csv("roofline_summary,worst_cells="
+            + ";".join(f"{r['arch']}/{r['shape']}({r['roofline_frac']:.3f})"
+                       for r in worst))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

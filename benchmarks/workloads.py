@@ -1,0 +1,108 @@
+"""Shared workload accounting for the paper benchmarks.
+
+Per-network FLOP/byte inventories for VGG19/SegNet x {-3,-8,-F} x
+{DCN-I, DCN-II} (paper Table III), plus real tile-dependency tables built
+by running the actual stage-1 offset conv of our DCN models on synthetic
+images — the TDTs that drive the scheduling/tile-size/fusion benchmarks
+are measured, not modeled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deform import conv2d, init_deformable_conv, offsets_to_coords
+from repro.core.tiles import (TileGrid, make_square_grid,
+                              per_pixel_input_tiles, tdt_from_coords)
+from repro.data import DataConfig, image_batch
+from repro.models.dcn_models import DcnNetConfig, layer_shapes
+
+NETWORKS = [("vgg19", 3), ("vgg19", 8), ("vgg19", -1),
+            ("segnet", 3), ("segnet", 8), ("segnet", -1)]
+VARIANTS = ["dcn1", "dcn2"]
+
+
+def net_label(name: str, n_deform: int) -> str:
+    return f"{name}-{'F' if n_deform < 0 else n_deform}"
+
+
+@dataclasses.dataclass
+class Workload:
+    """FLOPs (int8 MAC*2) for one network forward pass, img 224."""
+    conv_flops: float          # standard conv layers
+    offset_flops: float        # stage-1 offset convs
+    bli_flops: float           # stage-2 interpolation
+    deform_conv_flops: float   # stage-3 convs over deformed features
+    deform_bytes: float        # feature bytes touched by irregular sampling
+    total_bytes: float
+
+    @property
+    def deform_flops(self):
+        return self.offset_flops + self.bli_flops + self.deform_conv_flops
+
+    @property
+    def total_flops(self):
+        return self.conv_flops + self.deform_flops
+
+
+def build_workload(name: str, n_deform: int, variant: str,
+                   img: int = 224) -> Workload:
+    cfg = DcnNetConfig(name=name, n_deform=n_deform, variant=variant,
+                       img_size=img)
+    plan = cfg.stage_plan(decoder=(name == "segnet"))
+    pools = set()
+    from repro.models.dcn_models import _pool_positions, _VGG19_STAGES
+    pools = _pool_positions(cfg)
+    n_enc = sum(n for _, n in _VGG19_STAGES)
+
+    hw = img
+    conv_f = off_f = bli_f = dconv_f = 0.0
+    dbytes = tbytes = 0.0
+    kk = 9
+    for i, (ci, co, deform) in enumerate(plan):
+        layer_f = 2.0 * hw * hw * kk * ci * co
+        tbytes += hw * hw * (ci + co)
+        if deform:
+            L = 2 if variant == "dcn1" else 2 * kk
+            off_f += 2.0 * hw * hw * kk * ci * L
+            taps = 1 if variant == "dcn1" else kk
+            # DCN-I samples one deformed plane shared by taps; DCN-II
+            # produces kk deformed features per position (paper §II-A).
+            bli_f += 2.0 * hw * hw * taps * 4 * ci
+            dconv_f += layer_f
+            dbytes += hw * hw * taps * 4 * ci
+        else:
+            conv_f += layer_f
+        if i < n_enc and i in pools:
+            hw = max(1, hw // 2)
+        elif name == "segnet" and i >= n_enc and (2 * n_enc - 1 - i) in pools:
+            hw *= 2
+    return Workload(conv_f, off_f, bli_f, dconv_f, dbytes, tbytes)
+
+
+@functools.lru_cache(maxsize=32)
+def measured_tdt(h: int = 56, w: int = 56, c: int = 256,
+                 tiles_per_side: int = 5, seed: int = 0,
+                 offset_scale: float = 6.0):
+    """Run a REAL stage-1 offset conv on a synthetic image and build the
+    TDT from the resulting coordinates (the paper's §III methodology, VGG16
+    conv3-scale layer). Returns (B, per_pixel_tiles, grid)."""
+    key = jax.random.PRNGKey(seed)
+    params = init_deformable_conv(key, c, c)
+    params = params._replace(
+        w_off=jax.random.normal(jax.random.fold_in(key, 1),
+                                params.w_off.shape) * (offset_scale / c))
+    img = image_batch(DataConfig(seed=seed, global_batch=1), 0, img=h,
+                      channels=3)["images"]
+    x = jnp.tile(jnp.asarray(img), (1, 1, 1, c // 3 + 1))[..., :c]
+    offsets = conv2d(x, params.w_off, params.b_off)
+    coords = offsets_to_coords(offsets.astype(jnp.float32), 3, "dcn2")[0]
+    grid = make_square_grid(h, w, tiles_per_side)
+    B = np.asarray(tdt_from_coords(coords, grid, grid))
+    pp = np.asarray(per_pixel_input_tiles(coords, grid))
+    return B, pp, grid

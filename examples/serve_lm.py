@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests through the decode engine
+(continuous batching over fixed cache slots).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-27b --requests 8
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro — a JAX reproduction+extension of "Energy-Efficient Accelerator
+Design for Deformable Convolution Networks" (Xu et al., 2021), built as a
+multi-pod training/serving framework. See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (AsyncCheckpointer, completed_steps,
+                                    latest_step, restore, save)

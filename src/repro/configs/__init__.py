@@ -1,0 +1,47 @@
+"""Config registry: ``--arch <id>`` resolution for the 10 assigned
+architectures plus the paper's own VGG19/SegNet deformable networks."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (SHAPES, SMOKE_SHAPES, ShapeCell,
+                                cell_supported, input_axes, input_specs)
+from repro.models.dcn_models import DcnNetConfig
+
+_ARCH_MODULES = {
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False):
+    """Resolve an --arch id to its ModelConfig."""
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.smoke() if smoke else mod.full()
+
+
+# The paper's own networks (Table III), selectable like any other arch.
+def get_dcn_config(name: str, n_deform: int, variant: str = "dcn2",
+                   smoke: bool = False) -> DcnNetConfig:
+    if smoke:
+        return DcnNetConfig(name=name, n_deform=n_deform, variant=variant,
+                            img_size=32, width_mult=0.125, num_classes=10)
+    return DcnNetConfig(name=name, n_deform=n_deform, variant=variant,
+                        img_size=224, num_classes=1000)
+
+
+__all__ = ["ARCHS", "SHAPES", "SMOKE_SHAPES", "ShapeCell", "cell_supported",
+           "get_config", "get_dcn_config", "input_axes", "input_specs"]

@@ -1,0 +1,100 @@
+"""Config registry plumbing + the four assigned input-shape cells.
+
+Each arch file exports ``full()`` (the exact published config) and
+``smoke()`` (a reduced same-family config for CPU tests). ``input_specs``
+builds ShapeDtypeStruct stand-ins for every model input of a (config,
+shape) cell — the dry-run lowers against these, so nothing is allocated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.params import LogicalAxes
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+SMOKE_SHAPES = {
+    "train": ShapeCell("smoke_train", "train", 32, 2),
+    "decode": ShapeCell("smoke_decode", "decode", 32, 2),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic decode (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-softmax attention: 512k-token decode is "
+                       "quadratic-history; skipped per DESIGN.md §4")
+    return True, ""
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.n_codebooks > 1:
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of this cell."""
+    b, s = shape.global_batch, shape.seq
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s + 1), i32)}
+        if cfg.d_cross:
+            specs["cross_states"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_cross_tokens, cfg.d_cross), jnp.bfloat16)
+        return {"batch": specs}
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), i32)}
+        if cfg.d_cross:
+            specs["cross_states"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_cross_tokens, cfg.d_cross), jnp.bfloat16)
+        return {"batch": specs}
+    # decode: one new token against a seq-long cache
+    mk = lambda shp, axes: jax.ShapeDtypeStruct(shp, cache_dtype)
+    cache = lm.init_cache(mk, cfg, b, s, cache_dtype)
+    # state caches are fp32 in the concrete impl; keep dtype consistent
+    return {
+        "token": jax.ShapeDtypeStruct(_token_shape(cfg, b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+        "cache": cache,
+    }
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """LogicalAxes mirror of input_specs (for in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        tok_ax = LogicalAxes(("batch", None, None)
+                             if cfg.n_codebooks > 1 else ("batch", None))
+        specs = {"tokens": tok_ax}
+        if cfg.d_cross:
+            specs["cross_states"] = LogicalAxes(("batch", None, None))
+        return {"batch": specs}
+    mk = lambda shp, axes: LogicalAxes(axes)
+    cache = lm.init_cache(mk, cfg, shape.global_batch, shape.seq)
+    return {
+        "token": LogicalAxes(("batch", None, None)
+                             if cfg.n_codebooks > 1 else ("batch", None)),
+        "pos": LogicalAxes(("batch",)),
+        "cache": cache,
+    }

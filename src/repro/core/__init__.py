@@ -1,0 +1,40 @@
+"""Core contribution of the paper, in JAX.
+
+deform.py     Eq. 1-3 unified deformable-convolution model (DCN-I/II)
+tiles.py      Tile Dependency Table (TDT), §IV-C Fig. 9
+scheduler.py  Algorithm 1 runtime tile scheduler + FIFO buffer model
+simulator.py  DRAM traffic + energy simulator (Table II model)
+fusion.py     BLI (+) conv stage-fusion planner, §IV-D
+"""
+
+from repro.core.deform import (
+    DeformableConvParams,
+    bilinear_sample,
+    bli_coefficients,
+    conv2d,
+    deformable_conv2d,
+    fused_deformable_conv2d,
+    init_deformable_conv,
+    offsets_to_coords,
+)
+from repro.core.fusion import FusionMode, FusionPlan, LayerShape, plan_fusion
+from repro.core.scheduler import (
+    FifoBuffer,
+    TileSchedule,
+    schedule_tiles,
+    sequential_schedule,
+)
+from repro.core.simulator import (
+    DramEnergyModel,
+    TrafficReport,
+    dram_energy,
+    simulate_strategies,
+)
+from repro.core.tiles import (
+    TileGrid,
+    access_histogram,
+    make_square_grid,
+    per_pixel_input_tiles,
+    tdt_from_coords,
+    tile_access_histogram,
+)

@@ -1,0 +1,238 @@
+"""Unified deformable-convolution model (paper §II-B, Eq. 1-3).
+
+Implements the three-stage pipeline in pure JAX (this module is the
+algorithmic reference; the Pallas kernels in ``repro.kernels`` accelerate
+stages 2+3 and are validated against these functions):
+
+  stage 1  offset convolution  -> non-integer sampling coordinates  (Eq. 1)
+  stage 2  bilinear interpolation (BLI) at those coordinates        (Eq. 2)
+  stage 3  standard convolution over the deformed features          (Eq. 3)
+
+Two DCN variants from the paper (§II-A):
+  * DCN-I  : one (alpha, beta) pair per *plane position*, shared by all
+             K*K kernel taps and all channels.          offsets: (N,H,W,2)
+  * DCN-II : one (alpha, beta) pair per *tap* per position (the original
+             deformable convolution).                   offsets: (N,H,W,2*K*K)
+
+Layout: NHWC. Coordinates are (row, col) = (beta, alpha) in float32.
+Out-of-range coordinates are clamped to the valid feature extent — the
+paper's address converter (Eq. 4) likewise assumes in-range buffer
+addresses. An optional ``max_displacement`` clamps the *offset magnitude*;
+this is what makes the distributed halo-exchange path (DESIGN.md §2) legal.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DeformableConvParams(NamedTuple):
+    """Parameters of one deformable convolution (stages 1+3)."""
+
+    w_off: jax.Array  # (K, K, C_in, L)  offset-conv weights   (Eq. 1)
+    b_off: jax.Array  # (L,)             offset-conv bias
+    w: jax.Array      # (K, K, C_in, C_out) main conv weights  (Eq. 3)
+    b: jax.Array      # (C_out,)         main conv bias
+
+
+def offset_channels(kernel_size: int, variant: str) -> int:
+    """Number of offset channels L produced by stage 1."""
+    if variant == "dcn1":
+        return 2
+    if variant == "dcn2":
+        return 2 * kernel_size * kernel_size
+    raise ValueError(f"unknown DCN variant: {variant!r}")
+
+
+def init_deformable_conv(
+    key: jax.Array,
+    c_in: int,
+    c_out: int,
+    kernel_size: int = 3,
+    variant: str = "dcn2",
+    dtype=jnp.float32,
+) -> DeformableConvParams:
+    k_off, k_w = jax.random.split(key)
+    kk = kernel_size
+    L = offset_channels(kk, variant)
+    fan_in = kk * kk * c_in
+    # Offset conv is initialised at zero (standard DCN practice: start from
+    # the regular grid); main conv uses He init.
+    w_off = jnp.zeros((kk, kk, c_in, L), dtype)
+    b_off = jnp.zeros((L,), dtype)
+    w = (jax.random.normal(k_w, (kk, kk, c_in, c_out), dtype)
+         * jnp.sqrt(2.0 / fan_in).astype(dtype))
+    b = jnp.zeros((c_out,), dtype)
+    del k_off
+    return DeformableConvParams(w_off, b_off, w, b)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """Standard NHWC conv (stages 1 and 3 building block)."""
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32 if x.dtype == jnp.bfloat16 else None,
+    )
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y.astype(x.dtype)
+
+
+def base_tap_grid(kernel_size: int, dtype=jnp.float32) -> jax.Array:
+    """Relative (row, col) positions of the K*K regular taps, centred."""
+    r = (kernel_size - 1) / 2.0
+    d = jnp.arange(kernel_size, dtype=dtype) - r
+    taps = jnp.stack(jnp.meshgrid(d, d, indexing="ij"), axis=-1)  # (K,K,2)
+    return taps.reshape(-1, 2)  # (K*K, 2)
+
+
+def offsets_to_coords(
+    offsets: jax.Array,
+    kernel_size: int,
+    variant: str,
+    max_displacement: float | None = None,
+) -> jax.Array:
+    """Convert stage-1 offsets to absolute sampling coordinates.
+
+    offsets: (N, H, W, L) with L = 2 (DCN-I) or 2*K*K (DCN-II).
+    returns coords (N, H, W, K*K, 2) float, (row, col), clamped in-range.
+    """
+    n, h, w, L = offsets.shape
+    kk2 = kernel_size * kernel_size
+    assert L == offset_channels(kernel_size, variant), (L, variant)
+    dtype = offsets.dtype
+
+    rows = jnp.arange(h, dtype=dtype)[:, None, None]
+    cols = jnp.arange(w, dtype=dtype)[None, :, None]
+    centre = jnp.concatenate(
+        [jnp.broadcast_to(rows, (h, w, 1)), jnp.broadcast_to(cols, (h, w, 1))],
+        axis=-1,
+    )  # (H, W, 2)
+    taps = base_tap_grid(kernel_size, dtype)  # (KK, 2)
+
+    if variant == "dcn1":
+        off = offsets[..., None, :]                     # (N,H,W,1,2)
+    else:
+        off = offsets.reshape(n, h, w, kk2, 2)          # (N,H,W,KK,2)
+    if max_displacement is not None:
+        off = jnp.clip(off, -max_displacement, max_displacement)
+
+    coords = centre[None, :, :, None, :] + taps[None, None, None, :, :] + off
+    hi = jnp.array([h - 1, w - 1], dtype=dtype)
+    return jnp.clip(coords, 0.0, hi)
+
+
+def bli_coefficients(coords: jax.Array):
+    """Paper Eq. 5: the four BLI coefficients eta, mu, theta, gamma.
+
+    coords (..., 2) -> (floor_rc int32 (...,2), coeffs (..., 4)).
+    Coefficient order matches neighbour order
+    (r0,c0), (r0,c1), (r1,c0), (r1,c1)  =  (eta, theta, mu, gamma) with
+    da = fractional col, db = fractional row.
+    """
+    floor_rc = jnp.floor(coords)
+    frac = coords - floor_rc
+    db = frac[..., 0]  # row fraction
+    da = frac[..., 1]  # col fraction
+    eta = (1.0 - da) * (1.0 - db)
+    theta = da * (1.0 - db)
+    mu = (1.0 - da) * db
+    gamma = da * db
+    coeffs = jnp.stack([eta, theta, mu, gamma], axis=-1)
+    return floor_rc.astype(jnp.int32), coeffs
+
+
+def bilinear_sample(x: jax.Array, coords: jax.Array) -> jax.Array:
+    """Stage 2 (Eq. 2): sample deformed features with BLI.
+
+    x:      (N, H, W, C)
+    coords: (N, H, W, KK, 2) absolute (row, col), assumed in-range.
+    -> deformed features (N, H, W, KK, C)
+    """
+    n, h, w, c = x.shape
+    floor_rc, coeffs = bli_coefficients(coords)
+    r0 = jnp.clip(floor_rc[..., 0], 0, h - 1)
+    c0 = jnp.clip(floor_rc[..., 1], 0, w - 1)
+    r1 = jnp.clip(r0 + 1, 0, h - 1)
+    c1 = jnp.clip(c0 + 1, 0, w - 1)
+
+    x_flat = x.reshape(n, h * w, c)
+
+    def gather(ri, ci):
+        idx = ri * w + ci  # (N,H,W,KK)
+        flat = idx.reshape(n, -1)
+        out = jnp.take_along_axis(x_flat, flat[..., None], axis=1)
+        return out.reshape(idx.shape + (c,))
+
+    coeffs = coeffs.astype(x.dtype)
+    out = (gather(r0, c0) * coeffs[..., 0:1]
+           + gather(r0, c1) * coeffs[..., 1:2]
+           + gather(r1, c0) * coeffs[..., 2:3]
+           + gather(r1, c1) * coeffs[..., 3:4])
+    return out
+
+
+def deformable_conv2d(
+    x: jax.Array,
+    params: DeformableConvParams,
+    kernel_size: int = 3,
+    variant: str = "dcn2",
+    max_displacement: float | None = None,
+    return_coords: bool = False,
+):
+    """Full deformable convolution, Eq. 1-3, XLA reference path.
+
+    x (N,H,W,C_in) -> (N,H,W,C_out).
+    """
+    offsets = conv2d(x, params.w_off, params.b_off)          # Eq. 1
+    coords = offsets_to_coords(
+        offsets.astype(jnp.float32), kernel_size, variant, max_displacement)
+    deformed = bilinear_sample(x, coords)                    # Eq. 2
+    # Eq. 3: contraction over (tap, channel) == a 1x1 "im2col" matmul.
+    kk2 = kernel_size * kernel_size
+    w = params.w.reshape(kk2, x.shape[-1], params.w.shape[-1])
+    y = jnp.einsum("nhwkc,kco->nhwo", deformed, w,
+                   preferred_element_type=jnp.float32)
+    y = (y + params.b).astype(x.dtype)
+    if return_coords:
+        return y, coords
+    return y
+
+
+def fused_deformable_conv2d(
+    x: jax.Array,
+    params: DeformableConvParams,
+    kernel_size: int = 3,
+    variant: str = "dcn2",
+    max_displacement: float | None = None,
+) -> jax.Array:
+    """Stage-fused variant (paper §IV-D) on the XLA path.
+
+    ``jax.checkpoint`` forbids saving the deformed-feature tensor — which is
+    K*K times the input — so it is recomputed in the backward pass instead of
+    round-tripping through HBM, mirroring the paper's BLI (+) conv fusion.
+    The Pallas kernel (`repro.kernels.dcn_fused`) performs the same fusion
+    explicitly in VMEM for the forward pass.
+    """
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def stage23(x, params):
+        offsets = conv2d(x, params.w_off, params.b_off)
+        coords = offsets_to_coords(
+            offsets.astype(jnp.float32), kernel_size, variant, max_displacement)
+        deformed = bilinear_sample(x, coords)
+        kk2 = kernel_size * kernel_size
+        w = params.w.reshape(kk2, x.shape[-1], params.w.shape[-1])
+        y = jnp.einsum("nhwkc,kco->nhwo", deformed, w,
+                       preferred_element_type=jnp.float32)
+        return (y + params.b).astype(x.dtype)
+
+    return stage23(x, params)

@@ -1,0 +1,97 @@
+"""Stage-fusion planner — paper §IV-D (BLI (+) conv fusion).
+
+Decides, per deformable-conv layer, whether the three processing stages
+(offset conv -> BLI -> main conv) are executed
+
+  * ``FUSED``    : stages 2+3 tiled together; the deformed-feature
+                   intermediate (K*K x the input feature map) lives only in
+                   on-chip memory (VMEM on TPU) — the Pallas kernel
+                   ``repro.kernels.dcn_fused`` / the ``jax.checkpoint``
+                   XLA path implement this dataflow; or
+  * ``STAGED``   : each stage round-trips through DRAM/HBM — only chosen
+                   when a fused tile cannot fit on-chip even at the minimum
+                   tile size.
+
+The planner mirrors the paper's observation that the index tensor is small
+and always buffered on-chip, while the deformed features dominate and are
+what fusion must keep on-chip.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from enum import Enum
+
+
+class FusionMode(str, Enum):
+    FUSED = "fused"
+    STAGED = "staged"
+
+
+@dataclass(frozen=True)
+class LayerShape:
+    h: int
+    w: int
+    c_in: int
+    c_out: int
+    kernel_size: int = 3
+    dtype_bytes: int = 1  # paper: 8-bit fixed point; TPU path uses 2 (bf16)
+
+
+@dataclass(frozen=True)
+class FusionPlan:
+    mode: FusionMode
+    tile_pixels: int          # output pixels processed per fused tile
+    vmem_bytes: int           # on-chip working set of one fused tile
+    dram_bytes_saved: int     # intermediate round-trip avoided vs STAGED
+
+
+def fused_tile_bytes(shape: LayerShape, tile_pixels: int,
+                     halo: int = 2) -> int:
+    """On-chip working set of one fused output tile.
+
+    input halo tile + deformed patch matrix + conv weights + output tile.
+    The deformed patch matrix is (tile_pixels, K*K*C_in) — the tensor the
+    paper keeps on-chip. The halo region covers the clamped offset range;
+    ``halo`` is in units of tile side lengths (offsets clamped to R force
+    halo <= R, DESIGN.md §2).
+    """
+    kk2 = shape.kernel_size ** 2
+    side = max(1, int(math.sqrt(tile_pixels)))
+    in_side = side * (1 + halo)
+    input_tile = in_side * in_side * shape.c_in * shape.dtype_bytes
+    deformed = tile_pixels * kk2 * shape.c_in * shape.dtype_bytes
+    weights = kk2 * shape.c_in * shape.c_out * shape.dtype_bytes
+    output = tile_pixels * shape.c_out * shape.dtype_bytes
+    coords = tile_pixels * kk2 * 2 * 4  # fp32 indices (index buffer)
+    return input_tile + deformed + weights + output + coords
+
+
+def plan_fusion(shape: LayerShape, onchip_budget_bytes: int,
+                min_tile_pixels: int = 64) -> FusionPlan:
+    """Pick the largest fused tile that fits the on-chip budget.
+
+    Tries power-of-two tile sizes from the full plane downwards; falls back
+    to STAGED only if even ``min_tile_pixels`` does not fit (e.g. enormous
+    C_in*C_out weight working sets).
+    """
+    total_pixels = shape.h * shape.w
+    kk2 = shape.kernel_size ** 2
+    saved = 2 * total_pixels * kk2 * shape.c_in * shape.dtype_bytes
+
+    t = 1 << (total_pixels - 1).bit_length()  # >= total_pixels, pow2
+    while t >= min_tile_pixels:
+        vmem = fused_tile_bytes(shape, min(t, total_pixels))
+        if vmem <= onchip_budget_bytes:
+            return FusionPlan(FusionMode.FUSED, min(t, total_pixels), vmem,
+                              dram_bytes_saved=saved)
+        t //= 2
+    return FusionPlan(FusionMode.STAGED, min_tile_pixels,
+                      fused_tile_bytes(shape, min_tile_pixels),
+                      dram_bytes_saved=0)
+
+
+def plan_network(shapes: list[LayerShape], onchip_budget_bytes: int
+                 ) -> list[FusionPlan]:
+    return [plan_fusion(s, onchip_budget_bytes) for s in shapes]

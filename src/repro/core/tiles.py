@@ -1,0 +1,146 @@
+"""Tile Dependency Table (TDT) — paper §IV-C, Fig. 9.
+
+The input and output feature maps are divided into fixed tiles. For each
+*output* tile we record, as a bit vector over *input* tiles, which input
+tiles its deformable-convolution computation touches. The table is built
+"at runtime" from the stage-1 sampling coordinates: every deformed sample
+needs the 4 integer-grid neighbours of its (row, col) coordinate, and each
+neighbour lands in exactly one input tile (the paper's boundary-comparator
++ decoder circuit, Fig. 9, is a hardware argmax over tile boundaries — here
+it is an integer divide).
+
+Two implementations:
+  * ``tdt_from_coords``        — jittable jnp version (runtime tracking).
+  * ``per_pixel_input_tiles``  — per-output-pixel tile ids, used by the
+                                 naive-baseline traffic simulator
+                                 (paper Fig. 16, "W/O bit vector").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TileGrid(NamedTuple):
+    """A tiling of an (H, W) feature plane into th x tw tiles."""
+
+    h: int
+    w: int
+    th: int
+    tw: int
+
+    @property
+    def rows(self) -> int:
+        return math.ceil(self.h / self.th)
+
+    @property
+    def cols(self) -> int:
+        return math.ceil(self.w / self.tw)
+
+    @property
+    def num_tiles(self) -> int:
+        return self.rows * self.cols
+
+    def tile_of(self, r, c):
+        """Tile id of integer pixel coordinates (vectorised)."""
+        return (r // self.th) * self.cols + (c // self.tw)
+
+    def tile_bytes(self, channels: int, dtype_bytes: int = 1) -> int:
+        return self.th * self.tw * channels * dtype_bytes
+
+
+def make_square_grid(h: int, w: int, tiles_per_side: int) -> TileGrid:
+    """Paper-style "divided into n x n tiles" constructor (e.g. 5x5)."""
+    return TileGrid(h, w, math.ceil(h / tiles_per_side),
+                    math.ceil(w / tiles_per_side))
+
+
+def _neighbour_tiles(coords: jax.Array, grid: TileGrid) -> jax.Array:
+    """Input-tile id of each of the 4 BLI neighbours of every coordinate.
+
+    coords (..., 2) float -> (..., 4) int32 tile ids.
+    """
+    r0 = jnp.clip(jnp.floor(coords[..., 0]).astype(jnp.int32), 0, grid.h - 1)
+    c0 = jnp.clip(jnp.floor(coords[..., 1]).astype(jnp.int32), 0, grid.w - 1)
+    r1 = jnp.clip(r0 + 1, 0, grid.h - 1)
+    c1 = jnp.clip(c0 + 1, 0, grid.w - 1)
+    return jnp.stack(
+        [grid.tile_of(r0, c0), grid.tile_of(r0, c1),
+         grid.tile_of(r1, c0), grid.tile_of(r1, c1)], axis=-1)
+
+
+def tdt_from_coords(coords: jax.Array, in_grid: TileGrid,
+                    out_grid: TileGrid) -> jax.Array:
+    """Build the TDT from sampling coordinates (single image).
+
+    coords: (H, W, KK, 2) absolute float sampling coordinates for each
+            output position (output plane assumed same HxW as input, as in
+            the paper's stride-1 deformable layers).
+    returns B: (out_grid.num_tiles, in_grid.num_tiles) bool — B[o, i] is
+            True iff output tile o depends on input tile i.
+    """
+    h, w, kk, _ = coords.shape
+    rows = jnp.arange(h, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, :]
+    out_tile = out_grid.tile_of(rows, cols)                    # (H, W)
+    out_tile = jnp.broadcast_to(out_tile[..., None, None], (h, w, kk, 4))
+
+    in_tile = _neighbour_tiles(coords, in_grid)                # (H, W, KK, 4)
+
+    flat_out = out_tile.reshape(-1)
+    flat_in = in_tile.reshape(-1)
+    b = jnp.zeros((out_grid.num_tiles, in_grid.num_tiles), jnp.bool_)
+    return b.at[flat_out, flat_in].set(True)
+
+
+def per_pixel_input_tiles(coords: jax.Array, in_grid: TileGrid) -> jax.Array:
+    """(H, W, KK, 4) int32 input-tile id per neighbour per tap per pixel."""
+    return _neighbour_tiles(coords, in_grid)
+
+
+def tdt_standard_conv(in_grid: TileGrid, out_grid: TileGrid,
+                      kernel_size: int = 3) -> np.ndarray:
+    """TDT of a *standard* convolution (regular sliding window) — the
+    uniform-access baseline from the paper's §III characterisation."""
+    r = (kernel_size - 1) // 2
+    b = np.zeros((out_grid.num_tiles, in_grid.num_tiles), bool)
+    for tr in range(out_grid.rows):
+        for tc in range(out_grid.cols):
+            o = tr * out_grid.cols + tc
+            r_lo = max(tr * out_grid.th - r, 0)
+            r_hi = min((tr + 1) * out_grid.th - 1 + r, in_grid.h - 1)
+            c_lo = max(tc * out_grid.tw - r, 0)
+            c_hi = min((tc + 1) * out_grid.tw - 1 + r, in_grid.w - 1)
+            tiles_r = range(r_lo // in_grid.th, r_hi // in_grid.th + 1)
+            tiles_c = range(c_lo // in_grid.tw, c_hi // in_grid.tw + 1)
+            for ir in tiles_r:
+                for ic in tiles_c:
+                    b[o, ir * in_grid.cols + ic] = True
+    return b
+
+
+def access_histogram(coords: jax.Array, h: int, w: int) -> jax.Array:
+    """Per-input-feature utilisation counts (paper Fig. 3a).
+
+    Counts how many (output position, tap, neighbour) accesses touch each
+    input feature location.
+    """
+    r0 = jnp.clip(jnp.floor(coords[..., 0]).astype(jnp.int32), 0, h - 1)
+    c0 = jnp.clip(jnp.floor(coords[..., 1]).astype(jnp.int32), 0, w - 1)
+    r1 = jnp.clip(r0 + 1, 0, h - 1)
+    c1 = jnp.clip(c0 + 1, 0, w - 1)
+    idx = jnp.stack([r0 * w + c0, r0 * w + c1, r1 * w + c0, r1 * w + c1])
+    counts = jnp.zeros((h * w,), jnp.int32)
+    return counts.at[idx.reshape(-1)].add(1).reshape(h, w)
+
+
+def tile_access_histogram(coords: jax.Array, in_grid: TileGrid) -> jax.Array:
+    """Per-input-tile utilisation counts (paper Fig. 3b)."""
+    tiles = _neighbour_tiles(coords, in_grid)
+    counts = jnp.zeros((in_grid.num_tiles,), jnp.int32)
+    return counts.at[tiles.reshape(-1)].add(1)

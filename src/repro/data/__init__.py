@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, PrefetchIterator, host_slice,
+                                 image_batch, token_batch)

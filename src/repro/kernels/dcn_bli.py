@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: BLI as an interpolation-matrix matmul on the MXU.
+
+Paper §IV-B maps each bilinear interpolation to a 4-wide dot product on a
+cluster of 4 PEs (Fig. 5/6), with a parity-banked input buffer so the four
+neighbours are fetched in one cycle (Fig. 7). The TPU re-derivation
+(DESIGN.md §2): the MXU's idiomatic "gather" is a one-hot matmul, so we
+generalize one-hot to **4-hot**: per output row, an interpolation matrix
+row with the four BLI coefficients (eta, theta, mu, gamma — Eq. 5) at the
+four neighbour columns. The whole tile then becomes
+
+    out (P, C) = W_bli (P, S) @ x_tile (S, C)
+
+one dense matmul that runs at MXU rate, replacing P*C serial gathers. The
+4-hot matrix is *built inside the kernel* from iota comparisons (it never
+exists in HBM), so HBM traffic is exactly: x_tile + idx + coeff + out.
+
+VMEM blocking: grid (P/bp, C/bc); per step the kernel holds
+  W_bli block (bp, S) fp32 + x block (S, bc) + out (bp, bc).
+S (halo-tile pixels) is the contraction dim and stays resident; choose the
+tile grid so S*max(bc)*dtype fits VMEM (the fusion planner does this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bli_kernel(idx_ref, coeff_ref, x_ref, o_ref, *, s_pixels: int):
+    """One (bp, bc) output block.
+
+    idx_ref:   (bp, 4) int32 — flat neighbour indices into [0, S)
+    coeff_ref: (bp, 4) f32   — eta, theta, mu, gamma
+    x_ref:     (S, bc)       — halo tile (flattened pixels) x channel block
+    o_ref:     (bp, bc)
+    """
+    idx = idx_ref[...]
+    coeff = coeff_ref[...].astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], s_pixels), 1)
+
+    # 4-hot interpolation matrix, built in VREGs from comparisons.
+    w_bli = jnp.zeros((idx.shape[0], s_pixels), jnp.float32)
+    for j in range(4):
+        onehot = (cols == idx[:, j:j + 1]).astype(jnp.float32)
+        w_bli = w_bli + onehot * coeff[:, j:j + 1]
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(
+        w_bli, x, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_c", "interpret"))
+def bli_tile_matmul(
+    x_tile: jax.Array,       # (S, C) flattened halo tile
+    idx: jax.Array,          # (P, 4) int32 flat neighbour indices
+    coeff: jax.Array,        # (P, 4) float BLI coefficients
+    *,
+    block_p: int = 128,
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Deformed features (P, C) = 4-hot(idx, coeff) @ x_tile."""
+    s, c = x_tile.shape
+    p = idx.shape[0]
+    bp = min(block_p, p)
+    bc = min(block_c, c)
+    if p % bp or c % bc:
+        raise ValueError(f"P={p} and C={c} must tile by ({bp},{bc}); pad upstream")
+
+    return pl.pallas_call(
+        functools.partial(_bli_kernel, s_pixels=s),
+        grid=(p // bp, c // bc),
+        in_specs=[
+            pl.BlockSpec((bp, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((s, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, c), x_tile.dtype),
+        interpret=interpret,
+    )(idx, coeff, x_tile)
+
+
+# ---------------------------------------------------------------------------
+# Parity-plane gather variant (Fig. 7 adaptation): a VPU-style kernel that
+# uses the 4-bank decomposition directly. Kept for comparison/benchmarks;
+# the matmul variant above is the production path (see EXPERIMENTS.md).
+# ---------------------------------------------------------------------------
+
+def parity_planes(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Split (H, W, C) into 4 parity planes (the paper's 4 buffer banks).
+
+    Plane (pr, pc) holds x[pr::2, pc::2]. The four BLI neighbours of any
+    coordinate land in four *different* planes iff floor(r), floor(c) have
+    the right parity — generally they land in 4 distinct (plane, offset)
+    slots, which is exactly the conflict-free property of Fig. 7.
+    """
+    return x[0::2, 0::2], x[0::2, 1::2], x[1::2, 0::2], x[1::2, 1::2]
+
+
+def bli_gather_reference(x_tile: jax.Array, idx: jax.Array,
+                         coeff: jax.Array) -> jax.Array:
+    """XLA gather formulation over the same (S, C) tile — the baseline the
+    matmul kernel is hillclimbed against in benchmarks/bench_kernels.py."""
+    coeff = coeff.astype(jnp.float32)
+    out = jnp.zeros((idx.shape[0], x_tile.shape[1]), jnp.float32)
+    for j in range(4):
+        out = out + x_tile[idx[:, j]].astype(jnp.float32) * coeff[:, j:j + 1]
+    return out.astype(x_tile.dtype)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused BLI (+) main-conv for one output tile (§IV-D).
+
+The deformed-feature tensor is K*K x the size of the input feature map —
+the paper's fusion keeps it on-chip. Here the fused kernel materializes the
+deformed patch matrix (bp, KK*C_in) **only in VMEM/VREGs** and immediately
+contracts it with the main-conv weights:
+
+    deformed (bp*KK, C)  = 4-hot(idx, coeff) (bp*KK, S) @ x_tile (S, C)
+    out      (bp, O)     = reshape(deformed, (bp, KK*C)) @ w (KK*C, O) + b
+
+Two chained MXU matmuls per block; HBM traffic is x_tile + indices +
+weights + out — the deformed intermediate never leaves the core. This is
+the TPU-native form of the paper's Fig. 18 fusion.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(idx_ref, coeff_ref, x_ref, w_ref, b_ref, o_ref,
+                  *, s_pixels: int, kk: int):
+    """One bp-pixel output block, full C_out.
+
+    idx_ref:   (bp*KK, 4) int32
+    coeff_ref: (bp*KK, 4) f32
+    x_ref:     (S, C)
+    w_ref:     (KK*C, O)
+    b_ref:     (1, O)
+    o_ref:     (bp, O)
+    """
+    idx = idx_ref[...]
+    coeff = coeff_ref[...].astype(jnp.float32)
+    rows = idx.shape[0]                      # bp * KK
+    bp = rows // kk
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rows, s_pixels), 1)
+    w_bli = jnp.zeros((rows, s_pixels), jnp.float32)
+    for j in range(4):
+        onehot = (cols == idx[:, j:j + 1]).astype(jnp.float32)
+        w_bli = w_bli + onehot * coeff[:, j:j + 1]
+
+    x = x_ref[...].astype(jnp.float32)       # (S, C)
+    deformed = jnp.dot(w_bli, x, preferred_element_type=jnp.float32)
+    patches = deformed.reshape(bp, kk * x.shape[1])
+    w = w_ref[...].astype(jnp.float32)       # (KK*C, O)
+    acc = jnp.dot(patches, w, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kernel_size", "block_p", "interpret"))
+def dcn_fused_tile(
+    x_tile: jax.Array,   # (S, C_in) flattened halo tile
+    idx: jax.Array,      # (P, KK, 4) int32 flat neighbour indices
+    coeff: jax.Array,    # (P, KK, 4) float BLI coefficients
+    w: jax.Array,        # (KK, C_in, C_out) main conv weights
+    b: jax.Array,        # (C_out,)
+    *,
+    kernel_size: int = 3,
+    block_p: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused Eq.2+3 on one tile -> (P, C_out)."""
+    s, c = x_tile.shape
+    p, kk, _ = idx.shape
+    o = w.shape[-1]
+    assert kk == kernel_size * kernel_size, (kk, kernel_size)
+    bp = min(block_p, p)
+    if p % bp:
+        raise ValueError(f"P={p} must tile by {bp}; pad upstream")
+
+    idx2 = idx.reshape(p * kk, 4)
+    coeff2 = coeff.reshape(p * kk, 4)
+    w2 = w.reshape(kk * c, o)
+    b2 = b.reshape(1, o)
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, s_pixels=s, kk=kk),
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((bp * kk, 4), lambda i: (i, 0)),
+            pl.BlockSpec((bp * kk, 4), lambda i: (i, 0)),
+            pl.BlockSpec((s, c), lambda i: (0, 0)),
+            pl.BlockSpec((kk * c, o), lambda i: (0, 0)),
+            pl.BlockSpec((1, o), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, o), x_tile.dtype),
+        interpret=interpret,
+    )(idx2, coeff2, x_tile, w2, b2)

@@ -1,0 +1,134 @@
+"""Pallas TPU flash attention (blockwise-softmax, VMEM-resident running
+state) — the serving/prefill hot-spot of the LM architectures.
+
+Features needed by the assigned archs: causal masking, GQA (q-head ->
+kv-head mapping done in the BlockSpec index_map, so KV is never
+materialized per q-head), sliding-window (Gemma-2 local layers), logit
+soft-capping (Gemma-2). Oracle: ``repro.kernels.ref.attention_ref``.
+
+Grid: (batch*q_heads, Sq/bq, Skv/bk) with the KV dimension innermost;
+running max / denominator / accumulator live in VMEM scratch across the
+KV steps (the canonical TPU flash dataflow — outputs are written once, on
+the last KV step).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, sq: int, skv: int,
+                  bq: int, bk: int):
+    jk = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qi = (pl.program_id(1) * bq
+          + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+          + (skv - sq))                                  # absolute key-time of q
+    ki = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = ki < skv                                      # kv padding
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(jk == nkv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_pad = -(-sq // bq) * bq
+    skv_pad = -(-skv // bk) * bk
+
+    # (B*H, S, D) layout; KV heads are NOT repeated — the index_map below
+    # routes q-head bh to kv-head bh // g.
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    if sq_pad != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        kf = jnp.pad(kf, ((0, 0), (0, skv_pad - skv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, skv_pad - skv), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, sq=sq, skv=skv, bq=bq, bk=bk),
+        grid=(b * hq, sq_pad // bq, skv_pad // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out[:, :sq].reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+    return out

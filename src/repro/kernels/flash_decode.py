@@ -1,0 +1,121 @@
+"""Pallas TPU flash-decode kernel: split-KV attention for the decode path.
+
+Single-query attention (one new token per sequence) against a long KV
+cache is bandwidth-bound and, with the cache's kv_seq axis sharded, each
+chip reduces over its KV slice. This kernel parallelizes the reduction
+over KV *blocks* (FlashDecoding-style): grid (B*Hq, Skv/bk) with the
+running (m, l, acc) in VMEM scratch, exactly the flash dataflow with
+Sq == 1. Position masking (``lengths``) makes ragged batches safe — each
+sequence attends only to its own prefix, matching
+``repro.models.layers.attention_decode`` (the oracle wrapper in ref form).
+
+GQA is handled in the BlockSpec index_map (q head -> kv head), as in
+kernels/flash_attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, window: int | None,
+                   softcap: float | None, bk: int):
+    jk = pl.program_id(1)
+    nkv = pl.num_programs(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (1, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    length = len_ref[0]                                  # valid prefix len
+    ki = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = ki < length
+    if window is not None:
+        mask &= ki > length - 1 - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(jk == nkv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "block_k",
+                              "interpret"))
+def flash_decode(
+    q: jax.Array,        # (B, Hq, D) — the single new token's queries
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) int32 — valid prefix length per sequence
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> (B, Hq, D) attention output for the new token."""
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(block_k, s)
+    s_pad = -(-s // bk) * bk
+
+    qf = q.reshape(b * hq, 1, d)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    if s_pad != s:
+        kf = jnp.pad(kf, ((0, 0), (0, s_pad - s), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, s_pad - s), (0, 0)))
+    lens = jnp.repeat(lengths.astype(jnp.int32), hq).reshape(b * hq, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          softcap=softcap, bk=bk),
+        grid=(b * hq, s_pad // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(b, hq, d)

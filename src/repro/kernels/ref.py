@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deform import bli_coefficients
+
+
+# ---------------------------------------------------------------------------
+# BLI (paper Eq. 2) on a flat tile: the oracle for kernels/dcn_bli.py
+# ---------------------------------------------------------------------------
+
+def bli_tile_ref(x_tile: jax.Array, coords: jax.Array) -> jax.Array:
+    """Bilinear interpolation over a (S_h, S_w, C) tile.
+
+    x_tile: (S_h, S_w, C) input features (the halo tile).
+    coords: (P, 2) float coordinates local to the tile, in
+            [0, S_h-1] x [0, S_w-1].
+    -> (P, C) deformed features.
+    """
+    sh, sw, c = x_tile.shape
+    floor_rc, coeffs = bli_coefficients(coords)
+    r0 = jnp.clip(floor_rc[..., 0], 0, sh - 1)
+    c0 = jnp.clip(floor_rc[..., 1], 0, sw - 1)
+    r1 = jnp.clip(r0 + 1, 0, sh - 1)
+    c1 = jnp.clip(c0 + 1, 0, sw - 1)
+    flat = x_tile.reshape(sh * sw, c)
+    coeffs = coeffs.astype(x_tile.dtype)
+    return (flat[r0 * sw + c0] * coeffs[..., 0:1]
+            + flat[r0 * sw + c1] * coeffs[..., 1:2]
+            + flat[r1 * sw + c0] * coeffs[..., 2:3]
+            + flat[r1 * sw + c1] * coeffs[..., 3:4])
+
+
+def dcn_fused_tile_ref(x_tile: jax.Array, coords: jax.Array,
+                       w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused BLI + main conv (paper Eq. 2+3) on one tile — the oracle for
+    kernels/dcn_fused.py.
+
+    x_tile: (S_h, S_w, C_in)
+    coords: (P, KK, 2) local coordinates per output pixel per tap
+    w:      (KK, C_in, C_out) main conv weights
+    b:      (C_out,)
+    -> (P, C_out)
+    """
+    p, kk, _ = coords.shape
+    deformed = bli_tile_ref(x_tile, coords.reshape(p * kk, 2))
+    deformed = deformed.reshape(p, kk, x_tile.shape[-1])
+    y = jnp.einsum("pkc,kco->po", deformed, w,
+                   preferred_element_type=jnp.float32)
+    return (y + b).astype(x_tile.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle (serving/prefill path of the LM archs)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  window: int | None = None,
+                  softcap: float | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Reference softmax attention.
+
+    q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0 (GQA).
+    window: sliding-window size (Gemma-2 local layers).
+    softcap: logit soft-capping (Gemma-2).
+    -> (B, Sq, Hq, D)
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qi = jnp.arange(sq)[:, None] + (skv - sq)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE one-hot dispatch oracle (the C3 "gather as matmul" generalization)
+# ---------------------------------------------------------------------------
+
+def moe_dispatch_ref(x: jax.Array, dispatch: jax.Array) -> jax.Array:
+    """dispatch: (T, E, Cap) one-hot; x: (T, D) -> (E, Cap, D)."""
+    return jnp.einsum("tec,td->ecd", dispatch.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) cell on the production meshes and record the
+compiled artifact's memory/cost/collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # full 40-cell grid
+
+Artifacts land in benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+and feed benchmarks/roofline.py (deliverable g). Existing artifacts are
+skipped unless --force.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.steps import build_step
+from repro.optim import AdamWConfig
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64|c64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all tensor shapes in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective byte counts from post-SPMD optimized HLO.
+
+    Result-shape bytes of every collective op are summed per kind. Shapes
+    in the compiled module are PER-DEVICE (post-partitioning), so these are
+    per-chip wire bytes (ring-algorithm factors ~(n-1)/n are ignored —
+    consistent across all cells, so relative comparisons hold).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "X = <type> all-gather(...)" forms, incl. -start variants
+        m = re.search(r"=\s+(\S+)\s+([a-z\-]+)(-start)?\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op in _COLLECTIVES:
+            out[op]["count"] += 1
+            out[op]["bytes"] += _shape_bytes(m.group(1))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# --- §Perf hillclimb variants: config / sharding-rule overrides ---------
+import dataclasses as _dc
+
+
+def _v_remat_full(cfg, rules):
+    return _dc.replace(cfg, remat="full"), rules
+
+
+def _v_flashlike(cfg, rules):
+    return _dc.replace(cfg, remat="full", attn_impl="chunked",
+                       attn_chunk=2048), rules
+
+
+def _v_fsdp(cfg, rules):
+    """Drop TP, go 256-way FSDP+DP on the single-pod mesh: batch and the
+    d_model weight dim both shard over ("data","model")."""
+    rules = dict(rules)
+    rules.update(batch=("data", "model"), embed=("data", "model"),
+                 heads=None, kv_heads=None, mlp=None, vocab=None,
+                 heads_inner=None)
+    return cfg, rules
+
+
+def _v_cap1(cfg, rules):
+    moe = _dc.replace(cfg.moe, capacity_factor=1.0)
+    return _dc.replace(cfg, moe=moe), rules
+
+
+def _v_chunk512(cfg, rules):
+    return _dc.replace(cfg, attn_chunk=512), rules
+
+
+def _v_serve_tp(cfg, rules):
+    """Decode layout: weights stationary. Expert FFNs switch to the F-
+    sharded TP path (no per-step FSDP gathers); dense weights drop the
+    d_model FSDP axis (TP over "model" alone suffices at decode)."""
+    rules = dict(rules)
+    rules["embed"] = None
+    if cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, weight_mode="tp_f"))
+    return cfg, rules
+
+
+VARIANTS = {
+    "remat_full": _v_remat_full,
+    "flashlike": _v_flashlike,
+    "fsdp": _v_fsdp,
+    "cap1": _v_cap1,
+    "chunk512": _v_chunk512,
+    "serve_tp": _v_serve_tp,
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             force: bool = False, art_dir: str = ART_DIR,
+             variant: str | None = None) -> dict:
+    os.makedirs(art_dir, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{mesh_name}"
+    if variant:
+        stem += f"__{variant}"
+    path = os.path.join(art_dir, stem + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    ok, why = configs.cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "seq": shape.seq,
+           "global_batch": shape.global_batch}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    rules_override = None
+    if variant:
+        from repro.launch.sharding import sharding_rules
+        rules = sharding_rules(cfg, kind=shape.kind,
+                               long_ctx=(shape_name == "long_500k"))
+        for v in variant.split(","):
+            cfg, rules = VARIANTS[v](cfg, rules)
+        rules_override = rules
+        rec["variant"] = variant
+    t0 = time.time()
+    try:
+        bundle = build_step(cfg, shape, mesh,
+                            opt_cfg=AdamWConfig(state_dtype=jnp.bfloat16),
+                            rules_override=rules_override)
+        with mesh:
+            lowered = bundle.fn.lower(*bundle.args_abstract)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        from repro.launch.hlo_analysis import analyze_hlo
+        score_dims = {shape.seq, cfg.attn_chunk,
+                      -(-shape.seq // cfg.attn_chunk) * cfg.attn_chunk}
+        analysis = analyze_hlo(hlo, score_dims=score_dims)
+
+        rec.update(
+            status="ok",
+            chips=mesh_chips(mesh),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "generated_code_bytes": int(
+                    getattr(mem, "generated_code_size_in_bytes", 0)),
+            },
+            cost={k: float(v) for k, v in (cost or {}).items()
+                  if isinstance(v, (int, float))},
+            collectives=coll,
+            analysis={
+                "flops": analysis["flops"],
+                "traffic_bytes": analysis["traffic_bytes"],
+                "attn_traffic_bytes": analysis["attn_traffic_bytes"],
+                "traffic_by_kind": analysis["traffic_by_kind"],
+                "collective_bytes": analysis["collective_bytes"],
+                "collectives": analysis["collectives"],
+            },
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # record the failure; the grid keeps going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="comma-joined hillclimb overrides: "
+                         + ",".join(VARIANTS))
+    ap.add_argument("--out", default=ART_DIR)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in configs.ARCHS:
+            for s in configs.SHAPES:
+                for m in ("pod1", "pod2"):
+                    cells.append((a, s, m))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells.append((args.arch, args.shape, args.mesh))
+
+    failures = 0
+    for a, s, m in cells:
+        rec = run_cell(a, s, m, force=args.force, art_dir=args.out,
+                       variant=args.variant)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            ana = rec.get("analysis", {})
+            extra = (f"compile={rec['compile_s']}s "
+                     f"flops/dev={ana.get('flops', 0):.3g} "
+                     f"coll/dev={ana.get('collective_bytes', 0):.3g}B")
+            print(f"[dryrun] {a:24s} {s:12s} {m}: OK   {extra}", flush=True)
+            mem = rec["memory"]
+            print(f"         args={mem['argument_bytes']/1e9:.2f}GB "
+                  f"out={mem['output_bytes']/1e9:.2f}GB "
+                  f"temp={mem['temp_bytes']/1e9:.2f}GB per device",
+                  flush=True)
+        elif status == "skipped":
+            print(f"[dryrun] {a:24s} {s:12s} {m}: SKIP {rec['reason'][:60]}",
+                  flush=True)
+        else:
+            failures += 1
+            print(f"[dryrun] {a:24s} {s:12s} {m}: FAIL {rec['error'][:120]}",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,339 @@
+"""Structural analysis of compiled (post-SPMD) HLO text.
+
+``jax.stages.Compiled.cost_analysis`` counts while-loop bodies ONCE, so a
+pattern-scanned 61-layer model under-reports flops ~60x. This module
+re-derives per-device roofline inputs directly from the optimized HLO:
+
+  * builds the computation call graph (ENTRY -> fusions / while bodies),
+  * extracts ``known_trip_count`` from each while's backend_config and
+    propagates execution multipliers down the graph,
+  * counts matmul flops exactly from dot shapes + contracting dims
+    (2*M*N*K, with K looked up from the per-computation symbol table),
+  * sums collective payload bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute),
+  * sums an HBM-traffic proxy: operand+result bytes of every top-level
+    fusion / dot / copy / DUS / gather / scatter / collective (on TPU each
+    such op is one HBM round trip; elementwise interiors are fused).
+
+Shapes in post-SPMD HLO are per-device, so every number here is per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# HBM round-trip proxies. Excluded on purpose: reshape/bitcast (free),
+# broadcast/iota/transpose/slice (fused into consumers by the TPU
+# backend; standalone only in CPU HLO).
+_TRAFFIC_OPS = _COLLECTIVES + (
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "dynamic-slice", "gather", "scatter", "sort", "reduce", "concatenate",
+    "select-and-scatter")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+                "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"^([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_FRAME_ID_RE = re.compile(r"stack_frame_id=(\d+)")
+
+# ops originating in these functions are attention score/softmax chains
+# that the Pallas flash kernel keeps in VMEM on real TPU (DESIGN.md §6b)
+_ATTN_FUNCS = ("_sdpa", "_sdpa_chunked", "attention_ref", "mla_train",
+               "sdpa_any", "_mlstm_chunk")
+
+
+def parse_stack_tables(text: str) -> dict[int, str]:
+    """HLO-header FileNames/FunctionNames/FileLocations/StackFrames tables
+    -> {stack_frame_id: "fn_a;fn_b;..."} (frame + ancestors)."""
+    sections: dict[str, dict[int, str]] = {"FunctionNames": {}}
+    locs: dict[int, int] = {}     # file_location_id -> function_name_id
+    frames: dict[int, tuple[int, int]] = {}  # frame -> (loc, parent)
+    mode = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s in ("FileNames", "FunctionNames", "FileLocations",
+                 "StackFrames"):
+            mode = s
+            continue
+        if not s:
+            if mode:
+                mode = None
+            continue
+        if mode == "FunctionNames":
+            m = re.match(r'(\d+)\s+"(.*)"', s)
+            if m:
+                sections["FunctionNames"][int(m.group(1))] = m.group(2)
+        elif mode == "FileLocations":
+            m = re.match(r"(\d+)\s+\{.*function_name_id=(\d+)", s)
+            if m:
+                locs[int(m.group(1))] = int(m.group(2))
+        elif mode == "StackFrames":
+            m = re.match(r"(\d+)\s+\{file_location_id=(\d+)"
+                         r"(?:\s+parent_frame_id=(\d+))?", s)
+            if m:
+                frames[int(m.group(1))] = (int(m.group(2)),
+                                           int(m.group(3) or 0))
+        elif s.startswith("%") or s.startswith("ENTRY"):
+            break  # computations begin; tables are done
+
+    fnames = sections["FunctionNames"]
+    out: dict[int, str] = {}
+    for fid in frames:
+        chain, cur, hops = [], fid, 0
+        while cur and hops < 50:
+            loc, parent = frames.get(cur, (0, 0))
+            fn = fnames.get(locs.get(loc, -1))
+            if fn:
+                chain.append(fn)
+            if parent == cur:
+                break
+            cur, hops = parent, hops + 1
+        out[fid] = ";".join(chain)
+    return out
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _split_def(line: str):
+    """'%x = TYPE op(...)...' -> (name, type_str, op, rest) or None.
+
+    TYPE may be a parenthesized tuple containing '/*index=N*/' comments —
+    handled by paren balancing, not regex.
+    """
+    mn = _NAME_RE.match(line)
+    if not mn:
+        return None
+    rest = line[mn.end():]
+    if rest.startswith("("):  # tuple type: find matching close paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rest[:i + 1]
+                    tail = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    mo = _OP_RE.match(tail)
+    if not mo:
+        return None
+    return mn.group(1), type_str, mo.group(1), tail[mo.end() - 1:]
+
+
+def _type_dims(type_str: str):
+    """'f32[16,128]{1,0}' -> ('f32', (16, 128)); tuples -> sum via list."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _type_dims(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpRecord:
+    op: str
+    out_type: str
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    frame_id: int = 0
+    calls: list = dataclasses.field(default_factory=list)  # (name, trips)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+
+
+def _parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symbols: dict[str, str] = {}
+    entry_name = None
+    for raw in text.splitlines():
+        mc = _COMP_RE.match(raw)
+        if mc:
+            cur = Computation(mc.group(1), [])
+            comps[cur.name] = cur
+            symbols = {}
+            if raw.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        md = _split_def(raw)
+        if not md:
+            continue
+        name, out_type, op, tail = md
+        symbols[name] = out_type
+        rec = OpRecord(op=op, out_type=out_type)
+        mf = _FRAME_ID_RE.search(raw)
+        if mf:
+            rec.frame_id = int(mf.group(1))
+
+        if op in ("while", "fusion", "call", "conditional", "reduce",
+                  "sort", "scatter", "select-and-scatter",
+                  "reduce-scatter", "all-reduce", "map"):
+            trips = 1
+            mt = _TRIP_RE.search(raw)
+            if mt:
+                trips = int(mt.group(1))
+            for cm in _CALL_RE.finditer(raw):
+                rec.calls.append((cm.group(1), trips if op == "while" else 1))
+
+        if op == "dot":
+            out_elems = 1
+            for _, shape in _type_dims(out_type):
+                for d in shape:
+                    out_elems *= d
+            k = 1
+            ml = _LHS_CONTRACT_RE.search(raw)
+            operands = _OPERAND_RE.findall(tail.split(")")[0])
+            if ml and operands:
+                lhs_type = symbols.get(operands[0])
+                if lhs_type:
+                    dims = _type_dims(lhs_type)
+                    if dims:
+                        shape = dims[0][1]
+                        for ci in (int(c) for c in ml.group(1).split(",") if c):
+                            if ci < len(shape):
+                                k *= shape[ci]
+            rec.flops = 2.0 * out_elems * k
+
+        if op in _COLLECTIVES or (op + "-start") in _COLLECTIVES:
+            rec.collective_bytes = float(_type_bytes(out_type))
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            rec.collective_bytes = float(_type_bytes(out_type))
+            rec.op = base
+        if base in _TRAFFIC_OPS:
+            # result + named-operand bytes (operands resolved when local)
+            tb = _type_bytes(out_type)
+            for on in _OPERAND_RE.findall(tail.split(")")[0]):
+                t = symbols.get(on)
+                if t:
+                    tb += _type_bytes(t)
+            rec.traffic_bytes = float(tb)
+        cur.ops.append(rec)
+    return comps, entry_name
+
+
+def _is_score_shaped(type_str: str, score_dims: set[int]) -> bool:
+    """True when any tensor in the type is an attention score matrix:
+    the two trailing dims are both sequence/chunk lengths (e.g.
+    (B,H,S,S) logits, (B,H,S,ck) chunked scores, (S,S) masks) and the
+    tensor is large. Structural — survives fusion/CSE metadata hoisting.
+    """
+    for _, dims in _type_dims(type_str):
+        if len(dims) < 2:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        if (dims[-1] in score_dims and dims[-2] in score_dims
+                and n >= 1 << 20):
+            return True
+    return False
+
+
+def analyze_hlo(text: str, score_dims: set[int] | None = None) -> dict:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0, "attn_traffic_bytes": 0.0,
+                "traffic_by_kind": {}, "collective_bytes": 0.0,
+                "collectives": {}}
+    score_dims = score_dims or set()
+
+    # propagate execution multipliers through the call graph
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # iterate to fixed point (call graph is a DAG; few passes suffice)
+    for _ in range(32):
+        changed = False
+        new_mult: dict[str, float] = defaultdict(float)
+        new_mult[entry] = 1.0
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for rec in comp.ops:
+                for callee, trips in rec.calls:
+                    new_mult[callee] += m * trips
+        for k, v in new_mult.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-6:
+                changed = True
+        mult = new_mult
+        if not changed:
+            break
+
+    flops = 0.0
+    traffic = 0.0
+    attn_traffic = 0.0
+    traffic_by_kind: dict[str, float] = defaultdict(float)
+    coll_by_kind: dict[str, dict] = {k: {"count": 0.0, "bytes": 0.0}
+                                     for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for rec in comp.ops:
+            flops += m * rec.flops
+            traffic += m * rec.traffic_bytes
+            if rec.traffic_bytes:
+                traffic_by_kind[rec.op] += m * rec.traffic_bytes
+                if score_dims and _is_score_shaped(rec.out_type,
+                                                   score_dims):
+                    attn_traffic += m * rec.traffic_bytes
+            if rec.collective_bytes and rec.op in coll_by_kind:
+                coll_by_kind[rec.op]["count"] += m
+                coll_by_kind[rec.op]["bytes"] += m * rec.collective_bytes
+    total_coll = sum(v["bytes"] for v in coll_by_kind.values())
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        # traffic of attention score-shaped tensors (structural shape
+        # classification) — VMEM-resident under the Pallas flash kernel
+        # on real TPU; roofline.py reports the projected term.
+        "attn_traffic_bytes": attn_traffic,
+        "traffic_by_kind": dict(sorted(traffic_by_kind.items(),
+                                       key=lambda kv: -kv[1])),
+        "collective_bytes": total_coll,
+        "collectives": coll_by_kind,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,38 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis crosses the DCI; only DP gradient all-reduce (optionally int8-
+compressed, repro.optim.compression) travels on it.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked at first jax init, and only
+launch/dryrun.py forces 512 host devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (fake) host devices exist — used by
+    smoke/distributed tests (8 fake devices) and single-device runs."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_chips(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

@@ -1,0 +1,78 @@
+"""Logical-axis -> mesh sharding rules (MaxText-style), per arch x shape.
+
+Rules tables map the logical axes recorded at param-init time
+(repro.models.params) to mesh axes. ``resolve_spec`` enforces
+divisibility + one-mesh-axis-per-spec, so e.g. smollm's 15 heads simply
+degrade to replication instead of failing to lower.
+
+Policy (DESIGN.md §5):
+  * activations: batch over ("pod","data"); TP over "model".
+  * weights: TP dims (heads / mlp / vocab / expert) over "model"; for
+    >=8B-param archs the d_model dim is additionally FSDP-sharded over
+    ("pod","data") — GSPMD all-gathers one layer's weights just-in-time
+    inside the scan (the scan structure bounds the transient).
+  * decode caches: kv_seq over "model" (flash-decode-style split-S: every
+    chip holds a slice of every sequence's cache and attention psums over
+    "model"), except long_500k which spreads 512k tokens over
+    ("data","model") = 256-way.
+  * optimizer states m/v inherit the param specs verbatim.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.models.params import (abstract_params, param_axes, param_bytes,
+                                 tree_specs)
+from repro.models.transformer import ModelConfig
+
+FSDP_BYTES_THRESHOLD = 8e9  # params sizes above this get FSDP'd d_model
+
+
+def sharding_rules(cfg: ModelConfig, *, kind: str = "train",
+                   long_ctx: bool = False,
+                   fsdp: bool | None = None) -> dict:
+    if fsdp is None:
+        ab = abstract_params(lambda mk: lm.init_lm(mk, cfg),
+                             dtype=jax.numpy.bfloat16)
+        fsdp = param_bytes(ab) > FSDP_BYTES_THRESHOLD
+    dp = ("pod", "data")
+    rules = {
+        "batch": dp,
+        "vocab": "model",
+        "embed": dp if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model",
+        "embed_fsdp": dp,      # MoE expert weights always FSDP (they dominate)
+        "mlp_fsdp": dp,
+        "q_lora": None,
+        "kv_lora": None,
+        "layers": None,        # scan axis — never mesh-sharded
+        "heads_inner": "model",
+        "codebook": None,
+        "kv_seq": (("data", "model") if long_ctx
+                   else ("model" if kind == "decode" else None)),
+    }
+    return rules
+
+
+def param_tree_specs(cfg: ModelConfig, mesh, rules, dtype=jax.numpy.bfloat16):
+    axes = param_axes(lambda mk: lm.init_lm(mk, cfg))
+    ab = abstract_params(lambda mk: lm.init_lm(mk, cfg), dtype=dtype)
+    return tree_specs(axes, ab, rules, mesh), ab
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, mesh, rules, input_axes_tree,
+                input_specs_tree):
+    return tree_specs(input_axes_tree, input_specs_tree, rules, mesh)

@@ -1,0 +1,137 @@
+"""jit-compiled train / prefill / decode steps with explicit shardings.
+
+``build_step`` is the single entry point used by the trainer, the server
+and the dry-run: it resolves the sharding rule table for (config, shape),
+builds abstract inputs, and returns a jit'd function plus everything
+needed to ``.lower().compile()`` it without allocating a single parameter
+(ShapeDtypeStruct end to end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.models import lm
+from repro.models.params import (LogicalAxes, abstract_params, param_axes,
+                                 tree_specs)
+from repro.models.transformer import ModelConfig
+from repro.optim import AdamWConfig, abstract_opt_state, adamw_update
+from repro.launch.sharding import sharding_rules
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable                  # jit'd
+    args_abstract: tuple          # matching abstract args
+    in_shardings: tuple
+    out_shardings: Any
+    rules: dict
+    param_shardings: Any = None
+    opt_shardings: Any = None
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _replicated_like(mesh, struct):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), struct)
+
+
+def build_step(cfg: ModelConfig, shape: cfgbase.ShapeCell, mesh,
+               opt_cfg: AdamWConfig | None = None,
+               param_dtype=jnp.bfloat16,
+               donate: bool = True,
+               rules_override: dict | None = None) -> StepBundle:
+    long_ctx = shape.name == "long_500k"
+    rules = rules_override if rules_override is not None else \
+        sharding_rules(cfg, kind=shape.kind, long_ctx=long_ctx)
+
+    axes = param_axes(lambda mk: lm.init_lm(mk, cfg))
+    params_ab = abstract_params(lambda mk: lm.init_lm(mk, cfg),
+                                dtype=param_dtype)
+    pspecs = tree_specs(axes, params_ab, rules, mesh)
+    pshard = _ns(mesh, pspecs)
+
+    in_ab = cfgbase.input_specs(cfg, shape)
+    in_axes_tree = cfgbase.input_axes(cfg, shape)
+    in_specs = tree_specs(in_axes_tree, in_ab, rules, mesh)
+    in_shard = _ns(mesh, in_specs)
+
+    batch_axes = rules.get("batch") or ()
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    dp = tuple(a for a in batch_axes if a in mesh.shape)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    ctx = {"mesh": mesh, "act_pspec": P(dp_spec, None, None)}
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_ab = abstract_opt_state(params_ab, opt_cfg)
+        ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+        oshard = _ns(mesh, ospecs)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                return lm.lm_loss(p, cfg, batch, ctx)
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_p, new_o, om = adamw_update(params, grads, opt_state, opt_cfg)
+            return new_p, new_o, {**metrics, **om}
+
+        with mesh:
+            out_struct = jax.eval_shape(train_step, params_ab, opt_ab,
+                                        in_ab["batch"])
+        out_shard = (pshard, oshard, _replicated_like(mesh, out_struct[2]))
+        fn = jax.jit(train_step,
+                     in_shardings=(pshard, oshard, in_shard["batch"]),
+                     out_shardings=out_shard,
+                     donate_argnums=(0, 1) if donate else ())
+        return StepBundle(fn, (params_ab, opt_ab, in_ab["batch"]),
+                          (pshard, oshard, in_shard["batch"]), out_shard,
+                          rules, pshard, oshard)
+
+    def _logits_shard():
+        import math
+        b = shape.global_batch
+        dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+        dp_ok = bool(dp) and b % dp_size == 0
+        v_ok = cfg.vocab % mesh.shape.get("model", 1) == 0
+        return NamedSharding(mesh, P(dp_spec if dp_ok else None, None,
+                                     "model" if v_ok else None))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return lm.lm_prefill(params, cfg, batch, ctx)
+
+        logits_shard = _logits_shard()
+        fn = jax.jit(prefill_step,
+                     in_shardings=(pshard, in_shard["batch"]),
+                     out_shardings=logits_shard)
+        return StepBundle(fn, (params_ab, in_ab["batch"]),
+                          (pshard, in_shard["batch"]), logits_shard,
+                          rules, pshard)
+
+    # decode
+    def decode_step(params, cache, token, pos):
+        return lm.lm_decode_step(params, cfg, cache, token, pos, ctx)
+
+    out_shard = (_logits_shard(), in_shard["cache"])
+    fn = jax.jit(decode_step,
+                 in_shardings=(pshard, in_shard["cache"],
+                               in_shard["token"], in_shard["pos"]),
+                 out_shardings=out_shard,
+                 donate_argnums=(1,) if donate else ())
+    return StepBundle(fn, (params_ab, in_ab["cache"], in_ab["token"],
+                           in_ab["pos"]),
+                      (pshard, in_shard["cache"], in_shard["token"],
+                       in_shard["pos"]),
+                      out_shard, rules, pshard)

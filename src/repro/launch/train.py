@@ -1,0 +1,126 @@
+"""Training driver: data pipeline -> jit train step -> checkpoints.
+
+Runs any --arch at any scale: on this CPU container it trains the smoke
+configs for real (examples/train_lm.py uses it); on a pod it is the same
+code path the dry-run lowers (launch.steps.build_step).
+
+Fault tolerance: resumes from the newest complete checkpoint, writes
+atomically every --ckpt-every steps (async), handles SIGTERM preemption,
+and watches for stragglers (launch.elastic).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro import configs
+from repro.configs.base import ShapeCell
+from repro.data import DataConfig, PrefetchIterator, token_batch
+from repro.launch.elastic import (ElasticConfig, PreemptionGuard,
+                                  StragglerDetector)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_step
+from repro.models import lm
+from repro.models.params import Maker
+from repro.optim import AdamWConfig, init_opt_state
+
+
+def train_loop(cfg, shape: ShapeCell, mesh, *, steps: int = 20,
+               opt_cfg: AdamWConfig | None = None, ckpt_dir: str | None = None,
+               ckpt_every: int = 10, seed: int = 0, log_every: int = 5,
+               param_dtype=jnp.float32, verbose: bool = True):
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    bundle = build_step(cfg, shape, mesh, opt_cfg=opt_cfg,
+                        param_dtype=param_dtype, donate=False)
+
+    params = lm.init_lm(Maker("init", jax.random.PRNGKey(seed), param_dtype),
+                        cfg)
+    opt_state = init_opt_state(params, opt_cfg)
+
+    start_step = 0
+    ckptr = None
+    if ckpt_dir:
+        ckptr = ckpt.AsyncCheckpointer(ckpt_dir)
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            state = ckpt.restore(ckpt_dir, latest,
+                                 {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = latest
+            if verbose:
+                print(f"[train] resumed from step {latest}")
+
+    dcfg = DataConfig(seed=seed, vocab=cfg.vocab, seq=shape.seq,
+                      global_batch=shape.global_batch,
+                      n_codebooks=cfg.n_codebooks,
+                      cross_tokens=cfg.n_cross_tokens if cfg.d_cross else 0,
+                      cross_dim=cfg.d_cross or 0)
+    data = PrefetchIterator(lambda s: token_batch(dcfg, s),
+                            start_step=start_step)
+    guard = PreemptionGuard()
+    straggler = StragglerDetector(ElasticConfig())
+
+    losses = []
+    with mesh:
+        for _ in range(start_step, steps):
+            step_id, batch = next(data)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            params, opt_state, metrics = bundle.fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            if verbose and (step_id % log_every == 0 or step_id == steps - 1):
+                print(f"[train] step {step_id:5d} loss={loss:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if ckptr and (step_id + 1) % ckpt_every == 0:
+                ckptr.save(step_id + 1, {"params": params, "opt": opt_state})
+            if straggler.observe(dt) and verbose:
+                print(f"[train] straggler detected at step {step_id}; "
+                      "re-mesh recommended (launch.elastic)", flush=True)
+            if guard.requested:
+                if ckptr:
+                    ckptr.save(step_id + 1, {"params": params,
+                                             "opt": opt_state})
+                    ckptr.wait()
+                if verbose:
+                    print("[train] preemption: checkpointed, exiting 42")
+                raise SystemExit(42)
+    data.close()
+    if ckptr:
+        ckptr.wait()
+    return params, opt_state, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    shape = ShapeCell("cli_train", "train", args.seq, args.batch)
+    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    _, _, losses = train_loop(cfg, shape, mesh, steps=args.steps,
+                              opt_cfg=opt, ckpt_dir=args.ckpt_dir)
+    print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

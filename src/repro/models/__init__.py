@@ -1,0 +1,2 @@
+"""Model zoo: transformer blocks, MoE, SSM, xLSTM, LM assembly, and the
+paper's VGG19/SegNet deformable-conv networks."""

@@ -1,0 +1,214 @@
+"""Full language model: embeddings, layer stack, heads, loss, decode step.
+
+Covers all assigned-arch needs: multi-codebook audio tokens (musicgen),
+cross-attention image conditioning from a stub frontend (llama-3.2-vision),
+MTP auxiliary prediction (deepseek-v3), tied embeddings, final-logit
+softcap (gemma-2) and logit scaling (granite).
+
+Entry points:
+  init_lm(mk, cfg)                       params in any Maker mode
+  lm_loss(params, cfg, batch, ctx)       -> (loss, metrics)
+  lm_decode_step(params, cfg, cache, token, pos, ctx) -> (logits, cache)
+  init_cache / build_cross_cache         decode-cache management
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import make_norm
+from repro.models.params import Maker
+from repro.models.transformer import (ModelConfig, apply_layers_decode,
+                                      apply_layers_train, block_decode,
+                                      block_train, init_block,
+                                      init_block_cache, init_layer_caches,
+                                      init_layers)
+
+
+def init_lm(mk: Maker, cfg: ModelConfig):
+    init_norm, _ = make_norm(cfg.norm)
+    p: dict[str, Any] = {
+        "embed": mk((cfg.n_codebooks, cfg.vocab, cfg.d_model),
+                    (None, "vocab", "embed"), init="normal", scale=0.02),
+        "layers": init_layers(mk, cfg),
+        "final_norm": init_norm(mk, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = mk((cfg.n_codebooks, cfg.d_model, cfg.vocab),
+                       (None, "embed", "vocab"), init="fan_in")
+    if cfg.mtp:
+        from repro.models.transformer import BlockSpec
+        mtp_spec = BlockSpec(kind="mla" if cfg.mla else "attn", mlp="dense")
+        p["mtp"] = {
+            "proj": mk((2 * cfg.d_model, cfg.d_model), ("embed", None),
+                       init="fan_in"),
+            "norm_h": init_norm(mk, cfg.d_model),
+            "norm_e": init_norm(mk, cfg.d_model),
+            "block": init_block(mk, cfg, mtp_spec),
+        }
+    return p
+
+
+def _embed(p, cfg: ModelConfig, tokens):
+    """tokens: (B, S) int32 or (B, S, n_cb) -> (B, S, D)."""
+    table = p["embed"]
+    if cfg.n_codebooks == 1:
+        if tokens.ndim == 3:
+            tokens = tokens[..., 0]
+        x = table[0][tokens]
+    else:
+        x = sum(table[c][tokens[..., c]] for c in range(cfg.n_codebooks))
+    if cfg.emb_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _logits(p, cfg: ModelConfig, x):
+    """x: (..., D) -> (..., n_cb, V) fp32."""
+    if cfg.tie_embeddings:
+        w = p["embed"].swapaxes(1, 2)            # (n_cb, D, V)
+    else:
+        w = p["head"]
+    logits = jnp.einsum("...d,cdv->...cv", x, w.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.logits_scale is not None:
+        logits = logits / cfg.logits_scale
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def _xent(logits, labels):
+    """logits (..., V) fp32, labels (...) int32 -> mean CE."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def lm_loss(p, cfg: ModelConfig, batch, ctx=None):
+    """batch: {"tokens": (B, S+1[, n_cb]) int32, optional "cross_states"}.
+
+    -> (loss, metrics dict). Next-token CE averaged over all positions
+    (+ codebooks), plus MoE aux and MTP losses per config.
+    """
+    ctx = dict(ctx or {})
+    tokens = batch["tokens"]
+    if "cross_states" in batch:
+        ctx["cross_states"] = batch["cross_states"]
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+
+    from repro.models.transformer import maybe_constrain
+    x = maybe_constrain(_embed(p, cfg, inputs), ctx)
+    x, aux = apply_layers_train(p["layers"], cfg, x, ctx)
+    _, norm = make_norm(cfg.norm)
+    h_final = norm(p["final_norm"], x)
+    logits = _logits(p, cfg, h_final)                 # (B, S, n_cb, V)
+
+    if cfg.n_codebooks == 1:
+        lab = labels if labels.ndim == 2 else labels[..., 0]
+        loss = _xent(logits[..., 0, :], lab)
+    else:
+        loss = _xent(logits, labels)                  # labels (B,S,n_cb)
+
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.moe is not None:
+        loss = loss + cfg.aux_weight * aux
+
+    if cfg.mtp:
+        # Depth-1 MTP (deepseek-v3): combine the trunk state at position i
+        # with the embedding of token i+1 to predict token i+2.
+        mtp = p["mtp"]
+        h_in = norm(mtp["norm_h"], x[:, :-1])                 # (B, S-1, D)
+        e_in = norm(mtp["norm_e"], _embed(p, cfg, inputs[:, 1:]))
+        h = jnp.einsum("bsd,dk->bsk",
+                       jnp.concatenate([h_in, e_in], -1),
+                       mtp["proj"].astype(x.dtype))
+        from repro.models.transformer import BlockSpec
+        mtp_spec = BlockSpec(kind="mla" if cfg.mla else "attn", mlp="dense")
+        h, _ = block_train(mtp["block"], cfg, mtp_spec, h, ctx)
+        mtp_logits = _logits(p, cfg, norm(p["final_norm"], h))
+        lab2 = labels[:, 1:] if labels.ndim == 2 else labels[:, 1:, 0]
+        mtp_loss = _xent(mtp_logits[..., 0, :], lab2)
+        metrics["mtp"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def lm_prefill(p, cfg: ModelConfig, batch, ctx=None):
+    """Inference prefill: forward the full prompt, return last-position
+    logits (B, n_cb, V). (Cache materialization is the decode engine's
+    job; prefill compute — the dominant cost — is what this cell lowers.)
+    """
+    ctx = dict(ctx or {})
+    tokens = batch["tokens"]
+    if "cross_states" in batch:
+        ctx["cross_states"] = batch["cross_states"]
+    from repro.models.transformer import maybe_constrain
+    x = maybe_constrain(_embed(p, cfg, tokens), ctx)
+    x, _ = apply_layers_train(p["layers"], cfg, x, ctx)
+    _, norm = make_norm(cfg.norm)
+    x = norm(p["final_norm"], x)
+    return _logits(p, cfg, x[:, -1])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(mk_or_none, cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return init_layer_caches(mk_or_none, cfg, batch, max_len, dtype)
+
+
+def build_cross_cache(p, cfg: ModelConfig, cache, cross_states):
+    """Precompute cross-attention KV from encoder states into the cache
+    (done once per request; cross layers never update their cache)."""
+    def fill(layer_p, layer_c, spec):
+        if not spec.cross:
+            return layer_c
+        ap = layer_p["attn"]
+        k = jnp.einsum("bsd,dhk->bshk", cross_states,
+                       ap["wk"].astype(cross_states.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", cross_states,
+                       ap["wv"].astype(cross_states.dtype))
+        return {"mix": {"k": k.astype(layer_c["mix"]["k"].dtype),
+                        "v": v.astype(layer_c["mix"]["v"].dtype)}}
+
+    new = dict(cache)
+    layers = p["layers"]
+    if cfg.prefix:
+        new["prefix"] = [fill(layers["prefix"][i], cache["prefix"][i], s)
+                         for i, s in enumerate(cfg.prefix)]
+    if cfg.n_repeats:
+        stack = {}
+        for j, spec in enumerate(cfg.pattern):
+            if spec.cross:
+                stack[f"b{j}"] = jax.vmap(
+                    lambda lp, lc, _s=spec: fill(lp, lc, _s))(
+                        layers["stack"][f"b{j}"], cache["stack"][f"b{j}"])
+            else:
+                stack[f"b{j}"] = cache["stack"][f"b{j}"]
+        new["stack"] = stack
+    return new
+
+
+def lm_decode_step(p, cfg: ModelConfig, cache, token, pos, ctx=None):
+    """One decode step.
+
+    token: (B, 1) or (B, 1, n_cb) int32; pos: (B,) int32 current position.
+    -> (logits (B, n_cb, V) fp32, new_cache)
+    """
+    ctx = dict(ctx or {})
+    x = _embed(p, cfg, token)
+    x, new_cache = apply_layers_decode(p["layers"], cfg, x, cache, pos, ctx)
+    _, norm = make_norm(cfg.norm)
+    x = norm(p["final_norm"], x)
+    logits = _logits(p, cfg, x[:, -1])                # (B, n_cb, V)
+    return logits, new_cache

@@ -1,0 +1,167 @@
+"""Parameter construction with logical sharding axes (MaxText-style).
+
+Every model init function is written once against a ``Maker`` and can be
+instantiated in four modes:
+
+  * ``init``     — real arrays (PRNG-seeded),
+  * ``abstract`` — jax.ShapeDtypeStruct stand-ins (dry-run: no allocation),
+  * ``axes``     — ``LogicalAxes`` leaves naming each dim's logical axis,
+  * ``shapes``   — plain tuples (debugging / memory accounting).
+
+Logical axes are resolved to mesh PartitionSpecs by ``resolve_spec`` using
+a per-config rules table (see repro.launch.sharding). Resolution checks
+divisibility and drops non-divisible or conflicting mesh axes, so a config
+written for the 512-chip mesh still shards (degraded) on 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalAxes:
+    """Names the logical sharding axis of each tensor dimension."""
+
+    axes: tuple[str | None, ...]
+
+    def __iter__(self):
+        return iter(self.axes)
+
+    def __len__(self):
+        return len(self.axes)
+
+
+class Maker:
+    """Single-writer parameter factory. See module docstring."""
+
+    def __init__(self, mode: str, key: jax.Array | None = None,
+                 dtype=jnp.float32):
+        assert mode in ("init", "abstract", "axes", "shapes"), mode
+        self.mode = mode
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def _next_key(self) -> jax.Array:
+        k = jax.random.fold_in(self.key, self._n)
+        self._n += 1
+        return k
+
+    def __call__(self, shape: tuple[int, ...], axes: tuple[str | None, ...],
+                 init: str = "normal", scale: float | None = None):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.mode == "axes":
+            return LogicalAxes(axes)
+        if self.mode == "shapes":
+            return tuple(shape)
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        key = self._next_key()
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if init == "normal":
+            s = scale if scale is not None else 0.02
+            return jax.random.normal(key, shape, self.dtype) * s
+        if init == "fan_in":
+            fan = math.prod(shape[:-1])
+            s = scale if scale is not None else 1.0
+            return (jax.random.normal(key, shape, self.dtype)
+                    * (s / math.sqrt(max(fan, 1))))
+        raise ValueError(f"unknown init {init!r}")
+
+
+def init_params(fn: Callable, key: jax.Array, dtype=jnp.float32):
+    return fn(Maker("init", key, dtype))
+
+
+def abstract_params(fn: Callable, dtype=jnp.float32):
+    return fn(Maker("abstract", dtype=dtype))
+
+
+def param_axes(fn: Callable):
+    return fn(Maker("axes"))
+
+
+def stacked(n: int, fn: Callable, mk: Maker):
+    """Build ``n`` stacked copies of ``fn``'s params (for lax.scan layers).
+
+    The stacking dimension carries the logical axis "layers" (never mesh-
+    sharded; it is the scan axis).
+    """
+    if mk.mode == "axes":
+        inner = fn(Maker("axes"))
+        return jax.tree.map(
+            lambda a: LogicalAxes(("layers",) + a.axes), inner,
+            is_leaf=lambda x: isinstance(x, LogicalAxes))
+    if mk.mode == "shapes":
+        inner = fn(Maker("shapes"))
+        return jax.tree.map(lambda s: (n,) + s, inner,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    if mk.mode == "abstract":
+        inner = fn(Maker("abstract", dtype=mk.dtype))
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), inner)
+    keys = jax.random.split(mk._next_key(), n)
+    return jax.vmap(lambda k: fn(Maker("init", k, mk.dtype)))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh resolution
+# ---------------------------------------------------------------------------
+
+def resolve_spec(axes: LogicalAxes, shape: tuple[int, ...],
+                 rules: dict[str, str | tuple[str, ...] | None],
+                 mesh: jax.sharding.Mesh) -> P:
+    """LogicalAxes -> PartitionSpec under ``rules`` with divisibility and
+    mesh-axis-conflict checks (conflicting/non-dividing axes -> replicated,
+    as GSPMD requires each mesh axis to appear at most once)."""
+    used: set[str] = set()
+    out: list = []
+    for dim, name in zip(shape, axes.axes):
+        target = rules.get(name) if name else None
+        if target is None:
+            out.append(None)
+            continue
+        tgt = (target,) if isinstance(target, str) else tuple(target)
+        tgt = tuple(t for t in tgt if t in mesh.shape and t not in used)
+        size = math.prod(mesh.shape[t] for t in tgt) if tgt else 1
+        if not tgt or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(tgt)
+        out.append(tgt[0] if len(tgt) == 1 else tgt)
+    return P(*out)
+
+
+def tree_specs(axes_tree, abstract_tree, rules, mesh):
+    """Zip an axes tree with an abstract-shape tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda a, s: resolve_spec(a, s.shape, rules, mesh),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, LogicalAxes))
+
+
+def tree_shardings(axes_tree, abstract_tree, rules, mesh):
+    specs = tree_specs(axes_tree, abstract_tree, rules, mesh)
+    return jax.tree.map(
+        lambda sp: jax.sharding.NamedSharding(mesh, sp), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_bytes(abstract_tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(abstract_tree))
+
+
+def param_count(abstract_tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract_tree))

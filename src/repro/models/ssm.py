@@ -1,0 +1,157 @@
+"""Mamba (S6 selective-scan) block — the SSM layers of jamba-v0.1.
+
+TPU adaptation note (DESIGN.md §2): the CUDA selective-scan kernel fuses
+the state expansion (B,S,I,N) so it never hits HBM. In XLA we bound the
+same working set by **chunking**: an outer ``lax.scan`` over sequence
+chunks carries the (B,I,N) state; inside a chunk the recurrence runs as an
+associative scan over ``chunk_size`` steps, and ``jax.checkpoint`` drops
+the intra-chunk expansion on the backward pass. Working set per chunk:
+B*chunk*I*N instead of B*S*I*N (16x smaller at S=4096, chunk=256).
+
+Decode is the O(1) single-step recurrence over the carried (conv window,
+ssm state) cache — this is what makes the ``long_500k`` shape runnable for
+jamba (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Maker
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int | None = None
+    chunk_size: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank if self.dt_rank else -(-self.d_model // 16)
+
+
+def init_mamba(mk: Maker, cfg: MambaConfig):
+    d, i, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    return {
+        "in_proj": mk((d, 2 * i), ("embed", "mlp"), init="fan_in"),
+        "conv_w": mk((cfg.d_conv, i), (None, "mlp"), init="fan_in", scale=1.0),
+        "conv_b": mk((i,), ("mlp",), init="zeros"),
+        "x_proj": mk((i, r + 2 * n), ("mlp", None), init="fan_in"),
+        "dt_w": mk((r, i), (None, "mlp"), init="fan_in"),
+        "dt_b": mk((i,), ("mlp",), init="ones"),
+        "a_log": mk((i, n), ("mlp", None), init="ones"),
+        "d_skip": mk((i,), ("mlp",), init="ones"),
+        "out_proj": mk((i, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def _ssm_inputs(p, cfg: MambaConfig, u):
+    """u: (B, W, I) conv'd+silu'd inputs -> (dA, dBu, C) per chunk."""
+    xdb = jnp.einsum("bwi,ir->bwr", u, p["x_proj"].astype(u.dtype))
+    r, n = cfg.rank, cfg.d_state
+    dt = jax.nn.softplus(
+        jnp.einsum("bwr,ri->bwi", xdb[..., :r], p["dt_w"].astype(u.dtype))
+        .astype(jnp.float32) + p["dt_b"].astype(jnp.float32))
+    b_in = xdb[..., r:r + n].astype(jnp.float32)          # (B,W,N)
+    c_out = xdb[..., r + n:].astype(jnp.float32)          # (B,W,N)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (I,N)
+    da = jnp.exp(dt[..., None] * a)                       # (B,W,I,N)
+    dbu = (dt * u.astype(jnp.float32))[..., None] * b_in[..., None, :]
+    return da, dbu, c_out
+
+
+def _chunk_scan(carry_h, da, dbu):
+    """Associative scan of h' = da*h + dbu within one chunk.
+
+    carry_h: (B,I,N); da/dbu: (B,W,I,N). Returns (h_last, all_h)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    da_all, h_all = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+    h_all = h_all + da_all * carry_h[:, None]
+    return h_all[:, -1], h_all
+
+
+def _causal_conv(p, cfg: MambaConfig, x, conv_state=None):
+    """Depthwise causal conv1d, kernel d_conv. x: (B,S,I)."""
+    k = cfg.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    out = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(k))
+    out = out + p["conv_b"].astype(x.dtype)
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def mamba_train(p, cfg: MambaConfig, x):
+    """x: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    i = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    u, z = xz[..., :i], xz[..., i:]
+    u, _ = _causal_conv(p, cfg, u)
+
+    w = min(cfg.chunk_size, s)
+    s_pad = -(-s // w) * w
+    if s_pad != s:  # pad tail; padded steps only affect sliced-off outputs
+        u = jnp.pad(u, ((0, 0), (0, s_pad - s), (0, 0)))
+    u_c = u.reshape(b, s_pad // w, w, i).swapaxes(0, 1)    # (NC,B,W,I)
+
+    @jax.checkpoint
+    def step(h, u_chunk):
+        da, dbu, c_out = _ssm_inputs(p, cfg, u_chunk)
+        h_last, h_all = _chunk_scan(h, da, dbu)
+        y = jnp.einsum("bwin,bwn->bwi", h_all, c_out)
+        return h_last, y.astype(x.dtype)
+
+    h0 = jnp.zeros((b, i, cfg.d_state), jnp.float32)
+    _, y_c = jax.lax.scan(step, h0, u_c)
+    y = y_c.swapaxes(0, 1).reshape(b, s_pad, i)[:, :s]
+    u = u[:, :s]
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def init_mamba_cache(mk_or_none, cfg: MambaConfig, batch: int,
+                     dtype=jnp.bfloat16):
+    i, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+    if mk_or_none is not None:
+        return {"conv": mk_or_none((batch, k - 1, i), ("batch", None, "mlp")),
+                "ssm": mk_or_none((batch, i, n), ("batch", "mlp", None))}
+    return {"conv": jnp.zeros((batch, k - 1, i), dtype),
+            "ssm": jnp.zeros((batch, i, n), dtype)}
+
+
+def mamba_decode(p, cfg: MambaConfig, x, cache):
+    """Single-token step. x: (B,1,D); cache {conv (B,K-1,I), ssm (B,I,N)}."""
+    b = x.shape[0]
+    i = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    u, z = xz[..., :i], xz[..., i:]
+    u, conv_new = _causal_conv(p, cfg, u, conv_state=cache["conv"])
+
+    da, dbu, c_out = _ssm_inputs(p, cfg, u)                # W=1
+    h = cache["ssm"].astype(jnp.float32) * da[:, 0] + dbu[:, 0]
+    y = jnp.einsum("bin,bn->bi", h, c_out[:, 0])[:, None].astype(x.dtype)
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": conv_new.astype(cache["conv"].dtype),
+                 "ssm": h.astype(cache["ssm"].dtype)}

@@ -1,0 +1,351 @@
+"""Block assembly + pattern-scan layer stacking.
+
+A model is ``prefix`` blocks (non-repeating, e.g. deepseek-v3's 3 dense
+layers) followed by ``n_repeats`` copies of a ``pattern`` super-block
+(e.g. jamba's period-8 [7 mamba + 1 attn, alternating MoE], gemma-2's
+period-2 [local, global]). Pattern layers are stacked into leading-dim
+pytrees and executed with ``lax.scan`` -> compile time is O(pattern), not
+O(n_layers), at 61-layer scale (DESIGN.md §7).
+
+Each block kind exposes a train forward and a (decode, cache) pair; the
+cache pytree mirrors the param pytree structure so the scan can carry
+both together.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm, xlstm
+from repro.models.layers import (AttnConfig, MlaConfig, MlpConfig,
+                                 attention_decode, attention_train,
+                                 init_attention, init_kv_cache, init_mla,
+                                 init_mla_cache, init_mlp, make_norm,
+                                 mla_decode, mla_train, mlp)
+from repro.models.moe import MoeConfig, init_moe, moe_apply
+from repro.models.params import Maker, stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str = "attn"          # attn | mla | mamba | mlstm | slstm
+    mlp: str = "dense"          # dense | moe | none
+    window: int | None = None   # sliding-window attention
+    cross: bool = False         # cross-attention (kv from encoder states)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[BlockSpec, ...]
+    n_repeats: int
+    prefix: tuple[BlockSpec, ...] = ()
+    norm: str = "rms"                    # rms | layer
+    mlp_kind: str = "swiglu"
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    qk_norm: bool = False
+    qk_scale: float | None = None
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    sandwich_norm: bool = False          # gemma-2 post-norms
+    emb_scale: bool = False              # gemma: x *= sqrt(d)
+    logits_scale: float | None = None    # granite
+    moe: MoeConfig | None = None
+    mla: MlaConfig | None = None
+    mamba: ssm.MambaConfig | None = None
+    xlstm_cfg: xlstm.XlstmConfig | None = None
+    n_codebooks: int = 1                 # musicgen: 4
+    d_cross: int | None = None           # llama-vision encoder width
+    n_cross_tokens: int = 0
+    mtp: bool = False                    # deepseek multi-token prediction
+    mtp_weight: float = 0.3
+    aux_weight: float = 0.01
+    tie_embeddings: bool = False
+    remat: str = "none"                  # none | full | dots
+    scan_layers: bool = True
+    sub_quadratic: bool = False          # long_500k-capable decode
+    use_flash: bool = False              # Pallas flash attn on TPU runtimes
+    attn_impl: str = "ref"               # "ref" | "chunked" (online softmax)
+    attn_chunk: int = 2048
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + self.n_repeats * len(self.pattern)
+
+    def attn_cfg(self, spec: BlockSpec) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            rope_theta=self.rope_theta, rope_fraction=self.rope_fraction,
+            qk_norm=self.qk_norm, window=spec.window,
+            attn_softcap=self.attn_softcap, cross=spec.cross,
+            d_cross=self.d_cross, qk_scale=self.qk_scale,
+            impl=self.attn_impl, chunk=self.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def init_block(mk: Maker, cfg: ModelConfig, spec: BlockSpec):
+    init_norm, _ = make_norm(cfg.norm)
+    p: dict[str, Any] = {"norm1": init_norm(mk, cfg.d_model)}
+    if spec.kind == "attn":
+        p["attn"] = init_attention(mk, cfg.attn_cfg(spec))
+    elif spec.kind == "mla":
+        p["attn"] = init_mla(mk, cfg.mla)
+    elif spec.kind == "mamba":
+        p["mix"] = ssm.init_mamba(mk, cfg.mamba)
+    elif spec.kind == "mlstm":
+        p["mix"] = xlstm.init_mlstm(mk, cfg.xlstm_cfg)
+    elif spec.kind == "slstm":
+        p["mix"] = xlstm.init_slstm(mk, cfg.xlstm_cfg)
+    else:
+        raise ValueError(spec.kind)
+    if cfg.sandwich_norm:
+        p["post1"] = init_norm(mk, cfg.d_model)
+    if spec.mlp == "dense":
+        p["norm2"] = init_norm(mk, cfg.d_model)
+        p["mlp"] = init_mlp(mk, MlpConfig(cfg.d_model, cfg.d_ff, cfg.mlp_kind))
+        if cfg.sandwich_norm:
+            p["post2"] = init_norm(mk, cfg.d_model)
+    elif spec.mlp == "moe":
+        p["norm2"] = init_norm(mk, cfg.d_model)
+        p["moe"] = init_moe(mk, cfg.moe)
+        if cfg.sandwich_norm:
+            p["post2"] = init_norm(mk, cfg.d_model)
+    return p
+
+
+def _mix_train(p, cfg: ModelConfig, spec: BlockSpec, h, ctx):
+    if spec.kind == "attn":
+        kv_src = ctx.get("cross_states") if spec.cross else None
+        return attention_train(p["attn"], cfg.attn_cfg(spec), h,
+                               kv_src=kv_src, use_flash=cfg.use_flash)
+    if spec.kind == "mla":
+        return mla_train(p["attn"], cfg.mla, h, impl=cfg.attn_impl,
+                         chunk=cfg.attn_chunk)
+    if spec.kind == "mamba":
+        return ssm.mamba_train(p["mix"], cfg.mamba, h)
+    if spec.kind == "mlstm":
+        return xlstm.mlstm_train(p["mix"], cfg.xlstm_cfg, h)
+    if spec.kind == "slstm":
+        return xlstm.slstm_train(p["mix"], cfg.xlstm_cfg, h)
+    raise ValueError(spec.kind)
+
+
+def maybe_constrain(x, ctx):
+    """Apply the activation sharding constraint from ctx (GSPMD hint)."""
+    spec = ctx.get("act_pspec")
+    if spec is not None and len(spec) <= x.ndim:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+def block_train(p, cfg: ModelConfig, spec: BlockSpec, x, ctx):
+    """-> (x, aux). ctx: {"cross_states": ..., "mesh": ...}."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["norm1"], x)
+    y = _mix_train(p, cfg, spec, h, ctx)
+    if cfg.sandwich_norm:
+        y = norm(p["post1"], y)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp == "dense":
+        h = norm(p["norm2"], x)
+        y = mlp(p["mlp"], MlpConfig(cfg.d_model, cfg.d_ff, cfg.mlp_kind), h)
+        if cfg.sandwich_norm:
+            y = norm(p["post2"], y)
+        x = x + y
+    elif spec.mlp == "moe":
+        h = norm(p["norm2"], x)
+        y, aux = moe_apply(p["moe"], cfg.moe, h, mesh=ctx.get("mesh"))
+        if cfg.sandwich_norm:
+            y = norm(p["post2"], y)
+        x = x + y
+    return maybe_constrain(x, ctx), aux
+
+
+def block_decode(p, cfg: ModelConfig, spec: BlockSpec, x, cache, pos, ctx):
+    """Single-token step. -> (x, new_cache)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["norm1"], x)
+    if spec.kind == "attn":
+        y, new_mix = attention_decode(p["attn"], cfg.attn_cfg(spec), h,
+                                      cache["mix"], pos)
+    elif spec.kind == "mla":
+        y, new_mix = mla_decode(p["attn"], cfg.mla, h, cache["mix"], pos)
+    elif spec.kind == "mamba":
+        y, new_mix = ssm.mamba_decode(p["mix"], cfg.mamba, h, cache["mix"])
+    elif spec.kind == "mlstm":
+        y, new_mix = xlstm.mlstm_decode(p["mix"], cfg.xlstm_cfg, h, cache["mix"])
+    elif spec.kind == "slstm":
+        y, new_mix = xlstm.slstm_decode(p["mix"], cfg.xlstm_cfg, h, cache["mix"])
+    else:
+        raise ValueError(spec.kind)
+    if cfg.sandwich_norm:
+        y = norm(p["post1"], y)
+    x = x + y
+    if spec.mlp == "dense":
+        h = norm(p["norm2"], x)
+        y = mlp(p["mlp"], MlpConfig(cfg.d_model, cfg.d_ff, cfg.mlp_kind), h)
+        if cfg.sandwich_norm:
+            y = norm(p["post2"], y)
+        x = x + y
+    elif spec.mlp == "moe":
+        h = norm(p["norm2"], x)
+        y, _ = moe_apply(p["moe"], cfg.moe, h, mesh=ctx.get("mesh"))
+        if cfg.sandwich_norm:
+            y = norm(p["post2"], y)
+        x = x + y
+    return x, {"mix": new_mix}
+
+
+def init_block_cache(mk_or_none, cfg: ModelConfig, spec: BlockSpec,
+                     batch: int, max_len: int, dtype=jnp.bfloat16):
+    if spec.kind == "attn":
+        if spec.cross:
+            n = max(cfg.n_cross_tokens, 1)
+            mix = init_kv_cache(mk_or_none, cfg.attn_cfg(spec), batch, n, dtype)
+        else:
+            mix = init_kv_cache(mk_or_none, cfg.attn_cfg(spec), batch,
+                                max_len, dtype)
+    elif spec.kind == "mla":
+        mix = init_mla_cache(mk_or_none, cfg.mla, batch, max_len, dtype)
+    elif spec.kind == "mamba":
+        mix = ssm.init_mamba_cache(mk_or_none, cfg.mamba, batch, dtype)
+    elif spec.kind == "mlstm":
+        mix = xlstm.init_mlstm_cache(mk_or_none, cfg.xlstm_cfg, batch)
+    elif spec.kind == "slstm":
+        mix = xlstm.init_slstm_cache(mk_or_none, cfg.xlstm_cfg, batch)
+    else:
+        raise ValueError(spec.kind)
+    return {"mix": mix}
+
+
+# ---------------------------------------------------------------------------
+# Layer stack
+# ---------------------------------------------------------------------------
+
+def init_layers(mk: Maker, cfg: ModelConfig):
+    p: dict[str, Any] = {}
+    if cfg.prefix:
+        p["prefix"] = [init_block(mk, cfg, s) for s in cfg.prefix]
+    if cfg.n_repeats:
+        p["stack"] = {
+            f"b{j}": stacked(cfg.n_repeats,
+                             lambda m, _s=s: init_block(m, cfg, _s), mk)
+            for j, s in enumerate(cfg.pattern)
+        }
+    return p
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def apply_layers_train(p, cfg: ModelConfig, x, ctx):
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.prefix):
+        fn = _remat(cfg, functools.partial(block_train, cfg=cfg, spec=spec,
+                                           ctx=ctx))
+        x, a = fn(p["prefix"][i], x=x)
+        aux = aux + a
+
+    if not cfg.n_repeats:
+        return x, aux
+
+    def superblock(x, layer_p):
+        a_tot = jnp.zeros((), jnp.float32)
+        for j, spec in enumerate(cfg.pattern):
+            x, a = block_train(layer_p[f"b{j}"], cfg, spec, x, ctx)
+            a_tot = a_tot + a
+        return x, a_tot
+
+    if cfg.scan_layers:
+        def body(carry, layer_p):
+            return _remat(cfg, superblock)(carry, layer_p)
+        x, auxs = jax.lax.scan(body, x, p["stack"])
+        aux = aux + auxs.sum()
+    else:
+        for r in range(cfg.n_repeats):
+            layer_p = jax.tree.map(lambda t: t[r], p["stack"])
+            x, a = _remat(cfg, superblock)(x, layer_p)
+            aux = aux + a
+    return x, aux
+
+
+def apply_layers_decode(p, cfg: ModelConfig, x, cache, pos, ctx):
+    new_prefix = []
+    for i, spec in enumerate(cfg.prefix):
+        x, c = block_decode(p["prefix"][i], cfg, spec, x,
+                            cache["prefix"][i], pos, ctx)
+        new_prefix.append(c)
+
+    new_cache: dict[str, Any] = {}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    if cfg.n_repeats:
+        def body(carry, xs):
+            x = carry
+            layer_p, layer_c = xs
+            new_c = {}
+            for j, spec in enumerate(cfg.pattern):
+                x, c = block_decode(layer_p[f"b{j}"], cfg, spec, x,
+                                    layer_c[f"b{j}"], pos, ctx)
+                new_c[f"b{j}"] = c
+            return x, new_c
+
+        if cfg.scan_layers:
+            x, stack_cache = jax.lax.scan(body, x, (p["stack"], cache["stack"]))
+        else:
+            outs = []
+            for r in range(cfg.n_repeats):
+                layer = jax.tree.map(lambda t: t[r], (p["stack"], cache["stack"]))
+                x, c = body(x, layer)
+                outs.append(c)
+            stack_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+        new_cache["stack"] = stack_cache
+    return x, new_cache
+
+
+def init_layer_caches(mk_or_none, cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    cache: dict[str, Any] = {}
+    if cfg.prefix:
+        cache["prefix"] = [
+            init_block_cache(mk_or_none, cfg, s, batch, max_len, dtype)
+            for s in cfg.prefix]
+    if cfg.n_repeats:
+        if mk_or_none is not None:
+            def mk_stacked(shape, axes):
+                return mk_or_none((cfg.n_repeats,) + shape, ("layers",) + axes)
+            cache["stack"] = {
+                f"b{j}": init_block_cache(mk_stacked, cfg, s, batch, max_len,
+                                          dtype)
+                for j, s in enumerate(cfg.pattern)}
+        else:
+            cache["stack"] = {
+                f"b{j}": jax.tree.map(
+                    lambda t: jnp.broadcast_to(t, (cfg.n_repeats,) + t.shape)
+                    .copy(),
+                    init_block_cache(None, cfg, s, batch, max_len, dtype))
+                for j, s in enumerate(cfg.pattern)}
+    return cache

@@ -1,0 +1,285 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM runs in an exact **chunkwise-parallel** form (the TPU-friendly
+dataflow): within a chunk the update is a masked attention-like matmul on
+the MXU; across chunks a ``lax.scan`` carries the (C, n, m) state. The
+stabilizer m_t = max(logf_t + m_{t-1}, logi_t) unrolls to
+A_t + max(m_0, max_s(logi_s - A_s)) with A = cumsum(logf), so the chunked
+form reproduces the recurrence bit-for-bit in fp32 (tested against the
+step-by-step reference in tests/test_models.py).
+
+sLSTM has a true hidden-to-hidden recurrence (R z_{t-1}) and is inherently
+sequential: a ``lax.scan`` over time with per-head block-diagonal R.
+Simplifications vs the paper noted in DESIGN.md: no causal-conv feature
+path on the sLSTM gates.
+
+Both expose O(1)-state decode steps — this is what makes ``long_500k``
+runnable for xlstm-1.3b (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, init_rmsnorm
+from repro.models.params import Maker
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0      # mLSTM up-projection
+    slstm_proj_factor: float = 4.0 / 3.0
+    chunk_size: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(mk: Maker, cfg: XlstmConfig):
+    d, i, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = i // h
+    return {
+        "up": mk((d, 2 * i), ("embed", "mlp"), init="fan_in"),
+        # per-head block-diagonal q/k/v (as in xLSTM-1.3B)
+        "wq": mk((h, dh, dh), ("heads", None, None), init="fan_in"),
+        "wk": mk((h, dh, dh), ("heads", None, None), init="fan_in"),
+        "wv": mk((h, dh, dh), ("heads", None, None), init="fan_in"),
+        "w_if": mk((i, 2 * h), ("mlp", None), init="fan_in"),
+        "b_if": mk((2 * h,), (None,), init="zeros"),
+        "norm": init_rmsnorm(mk, i),
+        "down": mk((i, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def _mlstm_qkvif(p, cfg: XlstmConfig, u):
+    """u: (B,W,I) -> q,k,v (B,H,W,Dh), logi/logf (B,H,W) fp32."""
+    b, w, i = u.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    uh = u.reshape(b, w, h, dh).transpose(0, 2, 1, 3)       # (B,H,W,Dh)
+    q = jnp.einsum("bhwd,hde->bhwe", uh, p["wq"].astype(u.dtype))
+    k = jnp.einsum("bhwd,hde->bhwe", uh, p["wk"].astype(u.dtype)) * dh ** -0.5
+    v = jnp.einsum("bhwd,hde->bhwe", uh, p["wv"].astype(u.dtype))
+    gates = (jnp.einsum("bwi,ig->bwg", u, p["w_if"].astype(u.dtype))
+             .astype(jnp.float32) + p["b_if"].astype(jnp.float32))
+    logi = gates[..., :h].transpose(0, 2, 1)
+    logf = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)
+    return q, k, v, logi, logf
+
+
+def _mlstm_chunk(carry, q, k, v, logi, logf):
+    """One chunk. carry: C (B,H,Dk,Dv), n (B,H,Dk), m (B,H)."""
+    c0, n0, m0 = carry
+    bsz, h, w, dh = q.shape
+    a = jnp.cumsum(logf, axis=2)                           # (B,H,W)
+    g = jax.lax.cummax(logi - a, axis=2)
+    m = a + jnp.maximum(m0[..., None], g)                  # (B,H,W)
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # intra-chunk decay matrix
+    dmat = (a[..., :, None] - a[..., None, :]
+            + logi[..., None, :] - m[..., :, None])
+    tri = jnp.tril(jnp.ones((w, w), bool))
+    dmat = jnp.where(tri, jnp.exp(dmat), 0.0)              # (B,H,W,W)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * dmat
+    h_intra = jnp.einsum("bhts,bhsv->bhtv", scores, vf)
+    bscale = jnp.exp(a + m0[..., None] - m)                # (B,H,W)
+    h_inter = bscale[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qf, c0)
+    n_t = (bscale[..., None] * n0[:, :, None]
+           + jnp.einsum("bhts,bhsd->bhtd", dmat, kf))      # (B,H,W,Dk)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", qf, n_t)),
+                      jnp.exp(-m))
+    h_out = (h_intra + h_inter) / den[..., None]           # (B,H,W,Dv)
+
+    # end-of-chunk state
+    a_w = a[..., -1:]                                      # (B,H,1)
+    m_next = (a_w + jnp.maximum(m0[..., None], g[..., -1:]))[..., 0]
+    wlast = jnp.exp(a_w - a + logi - m_next[..., None])    # (B,H,W)
+    cscale = jnp.exp(a_w[..., 0] + m0 - m_next)            # (B,H)
+    c_next = (cscale[..., None, None] * c0
+              + jnp.einsum("bhs,bhsd,bhsv->bhdv", wlast, kf, vf))
+    n_next = cscale[..., None] * n0 + jnp.einsum("bhs,bhsd->bhd", wlast, kf)
+    return (c_next, n_next, m_next), h_out
+
+
+def mlstm_train(p, cfg: XlstmConfig, x):
+    """x: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    i, h, dh = cfg.d_inner, cfg.n_heads, cfg.d_head
+    uz = jnp.einsum("bsd,de->bse", x, p["up"].astype(x.dtype))
+    u, z = uz[..., :i], uz[..., i:]
+    q, k, v, logi, logf = _mlstm_qkvif(p, cfg, u)
+
+    w = min(cfg.chunk_size, s)
+    s_pad = -(-s // w) * w
+    if s_pad != s:  # pad tail; padded steps only affect sliced-off outputs
+        pad = ((0, 0), (0, 0), (0, s_pad - s))
+        q, k, v = (jnp.pad(t, pad + ((0, 0),)) for t in (q, k, v))
+        logi, logf = (jnp.pad(t, pad) for t in (logi, logf))
+    nc = s_pad // w
+
+    def chop(t):  # (B,H,S,...) -> (NC,B,H,W,...)
+        return t.reshape(t.shape[:2] + (nc, w) + t.shape[3:]).swapaxes(0, 2) \
+                .swapaxes(1, 2)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        return _mlstm_chunk(carry, *xs)
+
+    carry0 = (jnp.zeros((b, h, dh, dh), jnp.float32),
+              jnp.zeros((b, h, dh), jnp.float32),
+              jnp.full((b, h), -1e30, jnp.float32))
+    _, h_c = jax.lax.scan(step, carry0,
+                          (chop(q), chop(k), chop(v), chop(logi), chop(logf)))
+    # h_c: (NC,B,H,W,Dv) -> (B, NC*W=S_pad, H*Dv=I) -> slice to S
+    h_all = (h_c.transpose(1, 0, 3, 2, 4).reshape(b, s_pad, i)[:, :s]
+             .astype(x.dtype))
+    h_all = rmsnorm(p["norm"], h_all)
+    y = h_all * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["down"].astype(x.dtype))
+
+
+def init_mlstm_cache(mk_or_none, cfg: XlstmConfig, batch: int):
+    h, dh = cfg.n_heads, cfg.d_head
+    if mk_or_none is not None:
+        return {"c": mk_or_none((batch, h, dh, dh), ("batch", "heads", None, None)),
+                "n": mk_or_none((batch, h, dh), ("batch", "heads", None)),
+                "m": mk_or_none((batch, h), ("batch", "heads"))}
+    return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p, cfg: XlstmConfig, x, cache):
+    """Single step. x: (B,1,D)."""
+    b = x.shape[0]
+    i = cfg.d_inner
+    uz = jnp.einsum("bsd,de->bse", x, p["up"].astype(x.dtype))
+    u, z = uz[..., :i], uz[..., i:]
+    q, k, v, logi, logf = _mlstm_qkvif(p, cfg, u)          # W = 1
+    qf, kf, vf = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))
+    logi, logf = logi[..., 0], logf[..., 0]
+
+    m0 = cache["m"]
+    m = jnp.maximum(logf + m0, logi)
+    fg = jnp.exp(logf + m0 - m)
+    ig = jnp.exp(logi - m)
+    c = fg[..., None, None] * cache["c"] + ig[..., None, None] \
+        * kf[..., :, None] * vf[..., None, :]
+    n = fg[..., None] * cache["n"] + ig[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m))
+    h_out = (num / den[..., None]).reshape(b, 1, i).astype(x.dtype)
+    h_out = rmsnorm(p["norm"], h_out)
+    y = h_out * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["down"].astype(x.dtype))
+    return out, {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(mk: Maker, cfg: XlstmConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    f = int(d * cfg.slstm_proj_factor)
+    return {
+        "w": mk((d, 4 * d), ("embed", "mlp"), init="fan_in"),   # z,i,f,o
+        "r": mk((h, dh, 4 * dh), ("heads", None, None), init="fan_in"),
+        "b": mk((4 * d,), (None,), init="zeros"),
+        "norm": init_rmsnorm(mk, d),
+        "up_gate": mk((d, f), ("embed", "mlp"), init="fan_in"),
+        "up": mk((d, f), ("embed", "mlp"), init="fan_in"),
+        "down": mk((f, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def _slstm_cell(p, cfg: XlstmConfig, wx, state):
+    """wx: (B, 4D) input projection for this step."""
+    c, n, hid, m = state
+    b, d = hid.shape
+    h, dh = cfg.n_heads, d // cfg.n_heads
+    # gate layout per head: [z, i, f, o] each dh wide
+    rh = jnp.einsum("bhx,hxy->bhy", hid.reshape(b, h, dh).astype(jnp.float32),
+                    p["r"].astype(jnp.float32))             # (B,H,4*dh)
+    rh4 = rh.reshape(b, h, 4, dh)
+    wx4 = wx.astype(jnp.float32).reshape(b, h, 4, dh)
+    pre = wx4 + rh4 + p["b"].astype(jnp.float32).reshape(1, h, 4, dh)
+    z = jnp.tanh(pre[:, :, 0])
+    logi = pre[:, :, 1]
+    logf = jax.nn.log_sigmoid(pre[:, :, 2])
+    o = jax.nn.sigmoid(pre[:, :, 3])
+    mh = m.reshape(b, h, dh)
+    m_new = jnp.maximum(logf + mh, logi)
+    ig = jnp.exp(logi - m_new)
+    fg = jnp.exp(logf + mh - m_new)
+    ch = fg * c.reshape(b, h, dh) + ig * z
+    nh = fg * n.reshape(b, h, dh) + ig
+    hid_new = o * ch / jnp.maximum(nh, 1e-6)
+    return (ch.reshape(b, d), nh.reshape(b, d),
+            hid_new.reshape(b, d), m_new.reshape(b, d))
+
+
+def slstm_train(p, cfg: XlstmConfig, x):
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,de->bse", x, p["w"].astype(x.dtype))
+    # reorder (z,i,f,o per-d) -> per-head layout
+    wx = wx.reshape(b, s, 4, cfg.n_heads, d // cfg.n_heads) \
+        .transpose(0, 1, 3, 2, 4).reshape(b, s, 4 * d)
+
+    def step(state, wx_t):
+        new = _slstm_cell(p, cfg, wx_t, state)
+        return new, new[2]
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+    _, h_all = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    h_all = h_all.swapaxes(0, 1).astype(x.dtype)           # (B,S,D)
+    h_all = rmsnorm(p["norm"], h_all)
+    g = jnp.einsum("bsd,df->bsf", h_all, p["up_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", h_all, p["up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["down"].astype(x.dtype))
+
+
+def init_slstm_cache(mk_or_none, cfg: XlstmConfig, batch: int):
+    d = cfg.d_model
+    if mk_or_none is not None:
+        ax = ("batch", None)
+        return {k: mk_or_none((batch, d), ax) for k in ("c", "n", "h", "m")}
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros,
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, cfg: XlstmConfig, x, cache):
+    b, _, d = x.shape
+    wx = jnp.einsum("bsd,de->bse", x, p["w"].astype(x.dtype))[:, 0]
+    wx = wx.reshape(b, 4, cfg.n_heads, d // cfg.n_heads) \
+        .transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, hid, m = _slstm_cell(p, cfg, wx, state)
+    h_out = rmsnorm(p["norm"], hid[:, None].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", h_out, p["up_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", h_out, p["up"].astype(x.dtype))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                     p["down"].astype(x.dtype))
+    return out, {"c": c, "n": n, "h": hid, "m": m}

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, abstract_opt_state, adamw_update,
+                               clip_by_global_norm, cosine_lr, global_norm,
+                               init_opt_state)
+from repro.optim.compression import (compressed_psum_tree, dequantize,
+                                     init_error_state, quantize)

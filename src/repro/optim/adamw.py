@@ -1,0 +1,108 @@
+"""AdamW with pytree states, cosine schedule, global-norm clipping.
+
+Self-contained (no optax dependency). Optimizer state dtype is selectable:
+fp32 (default) or bf16 with stochastic-free simple cast (the deepseek-v3
+HBM-fit option recorded in DESIGN.md §7). State sharding mirrors param
+sharding (launch.sharding reuses the param PartitionSpecs for m/v).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    state_dtype: Any = jnp.float32
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def abstract_opt_state(params_abstract, cfg: AdamWConfig):
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.state_dtype)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(sds, params_abstract),
+        "v": jax.tree.map(sds, params_abstract),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step_vec = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            pf = pf * (1.0 - lr * cfg.weight_decay)
+        pf = pf - lr * step_vec
+        return (pf.astype(p.dtype), mf.astype(cfg.state_dtype),
+                vf.astype(cfg.state_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"step": step, "m": new_m, "v": new_v}, metrics

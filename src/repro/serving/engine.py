@@ -1,0 +1,118 @@
+"""Batched decode engine: continuous-batching KV/state cache management.
+
+The serving counterpart of launch/train.py. A fixed pool of ``batch``
+cache slots; requests are admitted into free slots (continuous batching),
+step() decodes one token for every active slot in a single jit'd call,
+finished slots (EOS or max_len) are released and refilled. Per-slot
+positions make the batch ragged-safe: each slot attends only to its own
+``pos`` prefix.
+
+Prefill here is incremental (the decode step consumed token by token) for
+simplicity of cache layout; the ``prefill_32k`` dry-run cell lowers the
+batched full-sequence prefill (lm.lm_prefill), which is the production
+prefill path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    temperature: float = 0.0
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch: int, max_len: int,
+                 mesh=None, cache_dtype=jnp.float32, eos_id: int | None = None,
+                 rng_seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.mesh = mesh
+        self.cache = lm.init_cache(None, cfg, batch, max_len, cache_dtype)
+        self.slots: list[Request | None] = [None] * batch
+        self.pos = np.zeros((batch,), np.int32)
+        self.pending_tok = np.zeros(
+            (batch, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, 1),
+            np.int32)
+        self.active = np.zeros((batch,), bool)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._key = jax.random.PRNGKey(rng_seed)
+        ctx = {"mesh": mesh} if mesh is not None else {}
+        self._step = jax.jit(
+            lambda p, c, t, pos: lm.lm_decode_step(p, cfg, c, t, pos, ctx))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.pos[i] = 0
+                self.pending_tok[i] = req.prompt[0]
+                self.active[i] = True
+
+    def _sample(self, logits, temperature):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(k, logits / temperature, axis=-1)
+
+    def step(self) -> int:
+        """One decode step over all active slots. Returns #active."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        tok = jnp.asarray(self.pending_tok)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._step(self.params, self.cache, tok, pos)
+
+        next_tok = np.asarray(self._sample(logits[:, 0], 0.0))  # (B,) or (B,cb)
+        for i in range(self.batch):
+            req = self.slots[i]
+            if req is None or not self.active[i]:
+                continue
+            self.pos[i] += 1
+            in_prompt = self.pos[i] < len(req.prompt)
+            if in_prompt:
+                nxt = req.prompt[self.pos[i]]
+            else:
+                nxt = next_tok[i]
+                req.out.append(int(np.asarray(nxt).reshape(-1)[0]))
+            self.pending_tok[i] = nxt
+            hit_eos = (self.eos_id is not None and not in_prompt
+                       and int(np.asarray(nxt).reshape(-1)[0]) == self.eos_id)
+            if (len(req.out) >= req.max_new or hit_eos
+                    or self.pos[i] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+                self.active[i] = False
+        return int(self.active.sum())
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            active = self.step()
+            if active == 0 and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,210 @@
+"""Core paper machinery: deformable conv Eq.1-3, TDT, Algorithm 1,
+traffic simulator, fusion planner."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DramEnergyModel, FifoBuffer, LayerShape, TileGrid,
+                        access_histogram, bilinear_sample, bli_coefficients,
+                        deformable_conv2d, dram_energy,
+                        fused_deformable_conv2d, init_deformable_conv,
+                        make_square_grid, offsets_to_coords,
+                        per_pixel_input_tiles, plan_fusion, schedule_tiles,
+                        sequential_schedule, simulate_strategies,
+                        tdt_from_coords)
+from repro.core.deform import conv2d
+from repro.core.fusion import FusionMode
+
+
+def _rand_coords(key, h, w, kk, max_r=None):
+    hi = jnp.array([h - 1.001, w - 1.001])
+    return jax.random.uniform(key, (h, w, kk, 2)) * hi
+
+
+class TestDeformableConv:
+    def test_bli_coefficients_sum_to_one(self):
+        coords = jax.random.uniform(jax.random.PRNGKey(0), (50, 2)) * 10
+        _, coeffs = bli_coefficients(coords)
+        np.testing.assert_allclose(coeffs.sum(-1), 1.0, rtol=1e-6)
+
+    def test_bli_integer_coords_exact(self):
+        """At integer coordinates BLI returns the feature exactly."""
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 3))
+        rr, cc = jnp.meshgrid(jnp.arange(8.0), jnp.arange(8.0), indexing="ij")
+        coords = jnp.stack([rr, cc], -1)[None, :, :, None, :]
+        out = bilinear_sample(x, coords)
+        np.testing.assert_allclose(out[:, :, :, 0], x, atol=1e-6)
+
+    def test_zero_offsets_equal_standard_conv(self):
+        """With zero offsets the deformable conv IS the standard conv."""
+        key = jax.random.PRNGKey(2)
+        params = init_deformable_conv(key, 8, 16)  # w_off zero-init
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 10, 10, 8))
+        y_def = deformable_conv2d(x, params)
+        y_std = conv2d(x, params.w, params.b)
+        # Border differs (clamped sampling vs zero pad); compare interior.
+        np.testing.assert_allclose(y_def[:, 2:-2, 2:-2], y_std[:, 2:-2, 2:-2],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_dcn1_vs_dcn2_offset_channels(self):
+        p1 = init_deformable_conv(jax.random.PRNGKey(0), 4, 4, variant="dcn1")
+        p2 = init_deformable_conv(jax.random.PRNGKey(0), 4, 4, variant="dcn2")
+        assert p1.w_off.shape[-1] == 2
+        assert p2.w_off.shape[-1] == 18
+
+    def test_fused_matches_unfused(self):
+        key = jax.random.PRNGKey(4)
+        params = init_deformable_conv(key, 6, 12)
+        params = params._replace(
+            w_off=jax.random.normal(key, params.w_off.shape) * 0.4)
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 9, 9, 6))
+        np.testing.assert_allclose(fused_deformable_conv2d(x, params),
+                                   deformable_conv2d(x, params),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_fused_grads_match(self):
+        key = jax.random.PRNGKey(6)
+        params = init_deformable_conv(key, 4, 4)
+        params = params._replace(
+            w_off=jax.random.normal(key, params.w_off.shape) * 0.3)
+        x = jax.random.normal(jax.random.PRNGKey(7), (1, 8, 8, 4))
+        g1 = jax.grad(lambda p: deformable_conv2d(x, p).sum())(params)
+        g2 = jax.grad(lambda p: fused_deformable_conv2d(x, p).sum())(params)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_max_displacement_clamps(self):
+        offsets = jnp.full((1, 4, 4, 18), 100.0)
+        coords = offsets_to_coords(offsets, 3, "dcn2", max_displacement=2.0)
+        centre_plus = jnp.max(coords[..., 0])
+        assert centre_plus <= 3 + 1 + 2.0  # centre + tap + clamp
+
+
+class TestTDT:
+    def test_tdt_covers_neighbours(self):
+        h = w = 20
+        grid = make_square_grid(h, w, 5)
+        coords = _rand_coords(jax.random.PRNGKey(0), h, w, 9)
+        B = np.asarray(tdt_from_coords(coords, grid, grid))
+        assert B.shape == (25, 25)
+        assert B.any(axis=1).all()  # every output tile has deps
+        # dependency implied by per-pixel tiles
+        pp = np.asarray(per_pixel_input_tiles(coords, grid))
+        for o in range(25):
+            r0, c0 = (o // 5) * 4, (o % 5) * 4
+            needed = np.unique(pp[r0:r0 + 4, c0:c0 + 4])
+            assert B[o, needed].all()
+
+    def test_access_histogram_totals(self):
+        h = w = 10
+        coords = _rand_coords(jax.random.PRNGKey(1), h, w, 9)
+        hist = access_histogram(coords, h, w)
+        assert int(hist.sum()) == h * w * 9 * 4
+
+
+class TestScheduler:
+    def _tdt(self, n=25, density=0.25, seed=0):
+        rng = np.random.default_rng(seed)
+        B = rng.random((n, n)) < density
+        B[np.arange(n), np.arange(n)] = True
+        return B
+
+    def test_schedule_covers_all_tiles(self):
+        B = self._tdt()
+        s = schedule_tiles(B, 4)
+        assert sorted(s.oid) == list(range(25))
+        for o, loads in zip(s.oid, s.iid):
+            assert set(loads) == set(np.flatnonzero(B[o]))
+
+    def test_first_tile_has_most_deps(self):
+        B = self._tdt(seed=3)
+        s = schedule_tiles(B, 4)
+        assert B[s.oid[0]].sum() == B.sum(axis=1).max()
+
+    def test_fifo_buffer(self):
+        buf = FifoBuffer(2)
+        assert not buf.touch(1) and not buf.touch(2)
+        assert buf.touch(1)           # hit
+        assert not buf.touch(3)       # evicts 1 (FIFO: 1 oldest)
+        assert not buf.touch(1)       # 1 was evicted -> miss
+        assert buf.loads == 4 and buf.hits == 1
+
+    def test_scheduled_never_worse_than_sequential(self):
+        for seed in range(5):
+            B = self._tdt(seed=seed, density=0.3)
+            from repro.core.scheduler import FifoBuffer as FB
+            for m in (3, 6, 12):
+                seq = sequential_schedule(B)
+                sch = schedule_tiles(B, m)
+                def replay(s):
+                    buf = FB(m)
+                    for loads in s.iid:
+                        for t in loads:
+                            buf.touch(t)
+                    return buf.loads
+                assert replay(sch) <= replay(seq) * 1.05  # allow tie+noise
+
+
+class TestSimulator:
+    def test_strategy_ordering_matches_paper(self):
+        """Fig. 14/16: naive >= bitvec >= scheduled in DRAM tile loads."""
+        h = w = 40
+        grid = make_square_grid(h, w, 5)
+        coords = _rand_coords(jax.random.PRNGKey(2), h, w, 9)
+        B = np.asarray(tdt_from_coords(coords, grid, grid))
+        pp = np.asarray(per_pixel_input_tiles(coords, grid))
+        rep = simulate_strategies(B, pp, grid, channels=64, c_out=64,
+                                  kernel_size=3, buffer_bytes=32 * 1024)
+        assert rep["naive"].tile_loads >= rep["bitvec"].tile_loads
+        assert rep["bitvec"].tile_loads >= rep["scheduled"].tile_loads
+
+    def test_fusion_removes_intermediate(self):
+        h = w = 20
+        grid = make_square_grid(h, w, 5)
+        coords = _rand_coords(jax.random.PRNGKey(3), h, w, 9)
+        B = np.asarray(tdt_from_coords(coords, grid, grid))
+        pp = np.asarray(per_pixel_input_tiles(coords, grid))
+        kw = dict(in_grid=grid, channels=16, c_out=16, kernel_size=3,
+                  buffer_bytes=8192)
+        fused = simulate_strategies(B, pp, fused=True, **kw)["scheduled"]
+        staged = simulate_strategies(B, pp, fused=False, **kw)["scheduled"]
+        assert fused.intermediate_bytes == 0
+        assert staged.intermediate_bytes == 2 * h * w * 9 * 16
+        assert staged.total_dram_bytes > fused.total_dram_bytes
+
+    def test_energy_monotone_in_traffic(self):
+        h = w = 20
+        grid = make_square_grid(h, w, 5)
+        coords = _rand_coords(jax.random.PRNGKey(4), h, w, 9)
+        B = np.asarray(tdt_from_coords(coords, grid, grid))
+        pp = np.asarray(per_pixel_input_tiles(coords, grid))
+        rep = simulate_strategies(B, pp, grid, 16, 16, 3, 8192)
+        e = {k: dram_energy(r, exec_time_s=1e-3) for k, r in rep.items()}
+        assert e["naive"] >= e["scheduled"]
+
+    def test_dram_model_positive(self):
+        m = DramEnergyModel()
+        assert m.read_pj_per_byte > 0 and m.write_pj_per_byte > 0
+        assert m.energy_j(1e6, 1e6, 1e-3) > 0
+
+
+class TestFusionPlanner:
+    def test_small_layer_fuses(self):
+        plan = plan_fusion(LayerShape(h=28, w=28, c_in=64, c_out=64),
+                           onchip_budget_bytes=16 * 2 ** 20)
+        assert plan.mode == FusionMode.FUSED
+        assert plan.dram_bytes_saved > 0
+
+    def test_huge_layer_stages(self):
+        plan = plan_fusion(LayerShape(h=512, w=512, c_in=2048, c_out=2048),
+                           onchip_budget_bytes=64 * 1024)
+        assert plan.mode == FusionMode.STAGED
+
+    def test_vmem_fits_budget_when_fused(self):
+        budget = 8 * 2 ** 20
+        plan = plan_fusion(LayerShape(h=56, w=56, c_in=128, c_out=128),
+                           onchip_budget_bytes=budget)
+        if plan.mode == FusionMode.FUSED:
+            assert plan.vmem_bytes <= budget

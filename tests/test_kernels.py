@@ -1,0 +1,193 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True
+executes the kernel body on CPU; BlockSpec tiling identical to TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deform import deformable_conv2d, init_deformable_conv
+from repro.kernels import ref
+from repro.kernels.dcn_bli import bli_gather_reference, bli_tile_matmul
+from repro.kernels.dcn_fused import dcn_fused_tile
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ops import (bli_pallas, coords_to_idx_coeff,
+                               deformable_conv2d_pallas)
+
+
+def _tile_case(key, sh, sw, c, p, kk=None, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    x_tile = jax.random.normal(k1, (sh, sw, c), dtype)
+    shape = (p, 2) if kk is None else (p, kk, 2)
+    coords = jax.random.uniform(
+        k2, shape, jnp.float32,
+        maxval=jnp.array([sh - 1.001, sw - 1.001]))
+    return x_tile, coords
+
+
+class TestBliKernel:
+    @pytest.mark.parametrize("sh,sw,c,p", [
+        (8, 8, 128, 128), (16, 16, 128, 256), (16, 8, 256, 128),
+        (32, 32, 128, 512),
+    ])
+    def test_matches_oracle(self, sh, sw, c, p):
+        x_tile, coords = _tile_case(jax.random.PRNGKey(p + c), sh, sw, c, p)
+        idx, coeff = coords_to_idx_coeff(coords, sh, sw)
+        out = bli_tile_matmul(x_tile.reshape(sh * sw, c), idx, coeff,
+                              interpret=True)
+        want = ref.bli_tile_ref(x_tile, coords)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                           (jnp.bfloat16, 2e-2)])
+    def test_dtypes(self, dtype, tol):
+        x_tile, coords = _tile_case(jax.random.PRNGKey(0), 16, 16, 128, 128,
+                                    dtype=dtype)
+        idx, coeff = coords_to_idx_coeff(coords, 16, 16)
+        out = bli_tile_matmul(x_tile.reshape(256, 128), idx, coeff,
+                              interpret=True)
+        want = ref.bli_tile_ref(x_tile, coords)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_matches_gather_formulation(self):
+        x_tile, coords = _tile_case(jax.random.PRNGKey(5), 16, 16, 128, 128)
+        idx, coeff = coords_to_idx_coeff(coords, 16, 16)
+        a = bli_tile_matmul(x_tile.reshape(256, 128), idx, coeff,
+                            interpret=True)
+        b = bli_gather_reference(x_tile.reshape(256, 128), idx, coeff)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_full_layer_wrapper(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, 16))
+        coords = jax.random.uniform(
+            jax.random.PRNGKey(2), (2, 12, 12, 9, 2), jnp.float32,
+            maxval=10.99)
+        out = bli_pallas(x, coords)
+        want = jax.vmap(ref.bli_tile_ref)(
+            x, coords.reshape(2, -1, 2)).reshape(out.shape)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("c,o,p", [(128, 64, 128), (128, 128, 256),
+                                       (64, 32, 128)])
+    def test_matches_oracle(self, c, o, p):
+        x_tile, coords = _tile_case(jax.random.PRNGKey(c + o), 16, 16, c, p,
+                                    kk=9)
+        idx, coeff = coords_to_idx_coeff(coords, 16, 16)
+        w = jax.random.normal(jax.random.PRNGKey(1), (9, c, o)) * 0.05
+        b = jax.random.normal(jax.random.PRNGKey(2), (o,)) * 0.1
+        out = dcn_fused_tile(x_tile.reshape(256, c), idx, coeff, w, b,
+                             interpret=True)
+        want = ref.dcn_fused_tile_ref(x_tile, coords, w, b)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+    def test_end_to_end_vs_xla_path(self):
+        """Pallas fused layer == XLA reference deformable conv."""
+        params = init_deformable_conv(jax.random.PRNGKey(3), 16, 24)
+        params = params._replace(
+            w_off=jax.random.normal(jax.random.PRNGKey(4),
+                                    params.w_off.shape) * 0.3)
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 12, 12, 16))
+        np.testing.assert_allclose(
+            deformable_conv2d_pallas(x, params),
+            deformable_conv2d(x, params), rtol=2e-4, atol=2e-4)
+
+    def test_dcn1_variant(self):
+        params = init_deformable_conv(jax.random.PRNGKey(6), 8, 8,
+                                      variant="dcn1")
+        params = params._replace(
+            w_off=jax.random.normal(jax.random.PRNGKey(7),
+                                    params.w_off.shape) * 0.5)
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 8, 8, 8))
+        np.testing.assert_allclose(
+            deformable_conv2d_pallas(x, params, variant="dcn1"),
+            deformable_conv2d(x, params, variant="dcn1"),
+            rtol=2e-4, atol=2e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,skv,hq,hkv,d", [
+        (64, 64, 4, 4, 32),    # MHA
+        (64, 128, 8, 2, 32),   # GQA + longer kv
+        (37, 100, 4, 2, 64),   # ragged (padding path)
+        (1, 128, 4, 2, 32),    # decode-like
+    ])
+    def test_causal(self, sq, skv, hq, hkv, d):
+        ks = jax.random.split(jax.random.PRNGKey(sq + skv), 3)
+        q = jax.random.normal(ks[0], (2, sq, hq, d))
+        k = jax.random.normal(ks[1], (2, skv, hkv, d))
+        v = jax.random.normal(ks[2], (2, skv, hkv, d))
+        out = flash_attention(q, k, v, interpret=True, block_q=32, block_k=32)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("kwargs", [
+        {"window": 16}, {"softcap": 20.0}, {"causal": False},
+        {"window": 16, "softcap": 30.0},
+    ])
+    def test_variants(self, kwargs):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32))
+        k = jax.random.normal(ks[1], (1, 64, 2, 32))
+        v = jax.random.normal(ks[2], (1, 64, 2, 32))
+        out = flash_attention(q, k, v, interpret=True, block_q=16,
+                              block_k=16, **kwargs)
+        want = ref.attention_ref(q, k, v, **kwargs)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(10), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.bfloat16)
+        out = flash_attention(q, k, v, interpret=True, block_q=32, block_k=32)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestFlashDecode:
+    def _oracle(self, q, kc, vc, lengths, window=None, softcap=None):
+        outs = []
+        for i in range(q.shape[0]):
+            L = int(lengths[i])
+            lo = max(0, L - window) if window is not None else 0
+            o = ref.attention_ref(q[i][None, None], kc[i][None, lo:L],
+                                  vc[i][None, lo:L], causal=False,
+                                  softcap=softcap)
+            outs.append(o[0, 0])
+        return jnp.stack(outs)
+
+    @pytest.mark.parametrize("kwargs", [
+        {}, {"softcap": 25.0}, {"window": 32},
+    ])
+    def test_ragged_lengths(self, kwargs):
+        b, s, hq, hkv, d = 3, 160, 8, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        q = jax.random.normal(ks[0], (b, hq, d))
+        kc = jax.random.normal(ks[1], (b, s, hkv, d))
+        vc = jax.random.normal(ks[2], (b, s, hkv, d))
+        lengths = jnp.array([40, 160, 97], jnp.int32)
+        got = flash_decode(q, kc, vc, lengths, interpret=True, block_k=64,
+                           **kwargs)
+        want = self._oracle(q, kc, vc, lengths, **kwargs)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_split_k_invariance(self):
+        """Result must not depend on the KV block size (the split-KV
+        reduction is exact, not approximate)."""
+        b, s, hq, hkv, d = 2, 128, 4, 4, 32
+        ks = jax.random.split(jax.random.PRNGKey(12), 3)
+        q = jax.random.normal(ks[0], (b, hq, d))
+        kc = jax.random.normal(ks[1], (b, s, hkv, d))
+        vc = jax.random.normal(ks[2], (b, s, hkv, d))
+        lengths = jnp.array([128, 77], jnp.int32)
+        outs = [flash_decode(q, kc, vc, lengths, interpret=True, block_k=bk)
+                for bk in (32, 64, 128)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)

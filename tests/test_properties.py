@@ -1,0 +1,168 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import FifoBuffer, schedule_tiles, sequential_schedule
+from repro.core.tiles import TileGrid, make_square_grid, tdt_from_coords
+from repro.core.deform import bli_coefficients, bilinear_sample
+from repro.kernels.ops import coords_to_idx_coeff
+from repro.optim import quantize, dequantize
+from repro.launch.elastic import plan_remesh
+from repro.models.params import LogicalAxes, resolve_spec
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+class TestSchedulerProperties:
+    @given(n=st.integers(4, 30), density=st.floats(0.05, 0.9),
+           m=st.integers(1, 20), seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_schedule_is_permutation_with_exact_deps(self, n, density, m,
+                                                     seed):
+        """Algorithm 1 output: every dependent output tile exactly once,
+        every input-load list == the tile's dependency set."""
+        rng = np.random.default_rng(seed)
+        B = rng.random((n, n)) < density
+        B[0] = True  # ensure at least one schedulable tile
+        sched = schedule_tiles(B, m)
+        dep_rows = [o for o in range(n) if B[o].any()]
+        assert sorted(sched.oid) == sorted(dep_rows)
+        for o, loads in zip(sched.oid, sched.iid):
+            assert sorted(loads) == sorted(np.flatnonzero(B[o]).tolist())
+
+    @given(n=st.integers(4, 24), density=st.floats(0.1, 0.7),
+           m=st.integers(2, 16), seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_scheduling_never_increases_loads(self, n, density, m, seed):
+        """Paper Fig. 16: Alg 1 ordering cannot load more tiles than the
+        sequential bit-vector baseline under the same FIFO buffer."""
+        rng = np.random.default_rng(seed)
+        B = rng.random((n, n)) < density
+        def replay(s):
+            buf = FifoBuffer(m)
+            for loads in s.iid:
+                for t in loads:
+                    buf.touch(t)
+            return buf.loads
+        assert replay(schedule_tiles(B, m)) <= replay(sequential_schedule(B))
+
+    @given(cap=st.integers(1, 8), seq=st.lists(st.integers(0, 9),
+                                               min_size=1, max_size=100))
+    @settings(**_SETTINGS)
+    def test_fifo_loads_plus_hits_equals_touches(self, cap, seq):
+        buf = FifoBuffer(cap)
+        for t in seq:
+            buf.touch(t)
+        assert buf.loads + buf.hits == len(seq)
+        assert len(buf.queue) <= cap
+
+
+class TestBliProperties:
+    @given(seed=st.integers(0, 10_000), h=st.integers(4, 16),
+           w=st.integers(4, 16))
+    @settings(**_SETTINGS)
+    def test_coefficients_partition_of_unity(self, seed, h, w):
+        key = jax.random.PRNGKey(seed)
+        coords = jax.random.uniform(key, (20, 2)) * jnp.array([h - 1, w - 1])
+        _, coeffs = bli_coefficients(coords)
+        np.testing.assert_allclose(np.asarray(coeffs.sum(-1)), 1.0,
+                                   atol=1e-5)
+        assert (np.asarray(coeffs) >= -1e-6).all()
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_bli_is_convex_combination(self, seed):
+        """BLI output lies within [min, max] of the 4 neighbours ->
+        sampling a constant field returns the constant."""
+        key = jax.random.PRNGKey(seed)
+        x = jnp.full((1, 8, 8, 3), 2.5)
+        coords = jax.random.uniform(key, (1, 8, 8, 9, 2)) * 6.99
+        out = bilinear_sample(x, coords)
+        np.testing.assert_allclose(np.asarray(out), 2.5, atol=1e-5)
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_idx_coeff_consistency(self, seed):
+        """4-hot decomposition reproduces bilinear_sample exactly."""
+        key = jax.random.PRNGKey(seed)
+        h = w = 8
+        c = 4
+        x = jax.random.normal(key, (h, w, c))
+        coords = jax.random.uniform(jax.random.fold_in(key, 1),
+                                    (30, 2)) * (h - 1.01)
+        idx, coeff = coords_to_idx_coeff(coords, h, w)
+        flat = x.reshape(-1, c)
+        manual = sum(flat[idx[:, j]] * coeff[:, j:j + 1] for j in range(4))
+        from repro.kernels.ref import bli_tile_ref
+        np.testing.assert_allclose(np.asarray(manual),
+                                   np.asarray(bli_tile_ref(x, coords)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestTdtProperties:
+    @given(seed=st.integers(0, 10_000), tiles=st.integers(2, 6))
+    @settings(**_SETTINGS)
+    def test_tdt_monotone_in_tile_size(self, seed, tiles):
+        """Coarser tiling -> dependency fraction can only grow."""
+        h = w = 24
+        key = jax.random.PRNGKey(seed)
+        coords = jax.random.uniform(key, (h, w, 9, 2)) * (h - 1.01)
+        fine = make_square_grid(h, w, tiles * 2)
+        coarse = make_square_grid(h, w, tiles)
+        bf = np.asarray(tdt_from_coords(coords, fine, fine))
+        bc = np.asarray(tdt_from_coords(coords, coarse, coarse))
+        assert bc.mean() >= bf.mean() - 1e-9
+
+
+class TestQuantizationProperties:
+    @given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+    @settings(**_SETTINGS)
+    def test_int8_roundtrip_error_bound(self, seed, scale):
+        x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                         (64,))) * scale
+        q, s = quantize(jnp.asarray(x))
+        err = np.abs(np.asarray(dequantize(q, s)) - x)
+        assert (err <= float(s) * 0.5 + 1e-6).all()
+
+    @given(seed=st.integers(0, 100))
+    @settings(**_SETTINGS)
+    def test_error_feedback_converges(self, seed):
+        """Summed error-feedback compression is unbiased over steps: the
+        residual stays bounded, so the time-averaged quantized gradient
+        approaches the true gradient."""
+        g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (32,)))
+        err = np.zeros_like(g)
+        acc = np.zeros_like(g)
+        for _ in range(64):
+            q, s = quantize(jnp.asarray(g + err))
+            dec = np.asarray(dequantize(q, s))
+            err = g + err - dec
+            acc += dec
+        np.testing.assert_allclose(acc / 64, g, atol=float(s))
+
+
+class TestShardingProperties:
+    @given(dim=st.integers(1, 64), model=st.sampled_from([1, 2, 4, 8, 16]))
+    @settings(**_SETTINGS)
+    def test_resolve_spec_divisibility(self, dim, model):
+        """Never emits a spec the mesh can't realize."""
+        import jax as _jax
+        if model > len(_jax.devices()):
+            return
+        mesh = _jax.make_mesh(
+            (1, model), ("data", "model"),
+            axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+        spec = resolve_spec(LogicalAxes(("mlp",)), (dim,),
+                            {"mlp": "model"}, mesh)
+        if spec[0] is not None:
+            assert dim % model == 0
+
+    @given(chips=st.integers(1, 4096), mp=st.sampled_from([1, 2, 4, 8, 16]))
+    @settings(**_SETTINGS)
+    def test_plan_remesh_always_valid(self, chips, mp):
+        data, model = plan_remesh(chips, mp)
+        assert data * model <= chips
+        assert data >= 1 and model >= 1

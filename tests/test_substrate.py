@@ -1,0 +1,164 @@
+"""Substrate layers: optimizer, data pipeline, checkpointing, elastic."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import DataConfig, PrefetchIterator, image_batch, token_batch
+from repro.launch.elastic import ElasticConfig, StragglerDetector, plan_remesh
+from repro.optim import (AdamWConfig, adamw_update, cosine_lr,
+                         clip_by_global_norm, global_norm, init_opt_state)
+
+
+class TestAdamW:
+    def _quad_problem(self):
+        target = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+        return params, loss, target
+
+    def test_converges_on_quadratic(self):
+        params, loss, target = self._quad_problem()
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                          total_steps=400)
+        state = init_opt_state(params, cfg)
+        for _ in range(400):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(params, g, state, cfg)
+        np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+    def test_weight_decay_only_on_matrices(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+        cfg = AdamWConfig(lr=1e-2, weight_decay=0.5, clip_norm=None)
+        state = init_opt_state(params, cfg)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(params, zeros, state, cfg)
+        assert float(jnp.abs(new["w"]).max()) < 1.0   # decayed
+        np.testing.assert_allclose(new["b"], params["b"])  # not decayed
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) > 1.0
+        np.testing.assert_allclose(global_norm(clipped), 1.0, rtol=1e-5)
+
+    def test_cosine_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        lrs = [float(cosine_lr(cfg, jnp.asarray(s))) for s in
+               (0, 5, 10, 55, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[2] > lrs[3] > lrs[4]
+        assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+
+    def test_bf16_state_dtype(self):
+        params = {"w": jnp.ones((4,))}
+        cfg = AdamWConfig(state_dtype=jnp.bfloat16)
+        state = init_opt_state(params, cfg)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.ones((4,))}
+        _, new_state, _ = adamw_update(params, g, state, cfg)
+        assert new_state["m"]["w"].dtype == jnp.bfloat16
+
+
+class TestData:
+    def test_determinism_across_restarts(self):
+        cfg = DataConfig(seed=7, vocab=100, seq=16, global_batch=4)
+        a = token_batch(cfg, 3)
+        b = token_batch(cfg, 3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_host_sharding_disjoint(self):
+        full = token_batch(DataConfig(seed=1, vocab=50, seq=8,
+                                      global_batch=8), 0)
+        h0 = token_batch(DataConfig(seed=1, vocab=50, seq=8, global_batch=8,
+                                    n_hosts=2, host_id=0), 0)
+        h1 = token_batch(DataConfig(seed=1, vocab=50, seq=8, global_batch=8,
+                                    n_hosts=2, host_id=1), 0)
+        assert h0["tokens"].shape[0] == 4
+        assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+    def test_tokens_in_vocab(self):
+        cfg = DataConfig(seed=2, vocab=37, seq=32, global_batch=4)
+        t = token_batch(cfg, 5)["tokens"]
+        assert t.min() >= 0 and t.max() < 37
+
+    def test_prefetch_iterator_ordered(self):
+        it = PrefetchIterator(lambda s: {"x": np.full((2,), s)},
+                              start_step=4, prefetch=2)
+        steps = [next(it)[0] for _ in range(5)]
+        it.close()
+        assert steps == [4, 5, 6, 7, 8]
+
+    def test_image_batch_shapes(self):
+        cfg = DataConfig(seed=3, global_batch=2)
+        b = image_batch(cfg, 0, img=16, channels=3, classes=5)
+        assert b["images"].shape == (2, 16, 16, 3)
+        assert b["labels"].shape == (2,)
+        assert np.isfinite(b["images"]).all()
+
+
+class TestCheckpoint:
+    def _tree(self, k=0):
+        return {"a": jnp.arange(6.0).reshape(2, 3) + k,
+                "nested": {"b": jnp.ones((4,), jnp.int32) * k}}
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = self._tree(3)
+        ckpt.save(str(tmp_path), 7, tree)
+        back = ckpt.restore(str(tmp_path), 7, jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_keep_n_eviction(self, tmp_path):
+        for s in range(6):
+            ckpt.save(str(tmp_path), s, self._tree(s), keep=2)
+        assert ckpt.completed_steps(str(tmp_path)) == [4, 5]
+
+    def test_torn_write_invisible(self, tmp_path):
+        """A .tmp directory (simulated crash mid-write) is never listed."""
+        ckpt.save(str(tmp_path), 1, self._tree())
+        os.makedirs(tmp_path / "step_00000002.tmp")
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_async_checkpointer(self, tmp_path):
+        ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+        for s in range(3):
+            ac.save(s, self._tree(s))
+        ac.wait()
+        assert ckpt.completed_steps(str(tmp_path)) == [0, 1, 2]
+        back = ckpt.restore(str(tmp_path), 2, self._tree())
+        np.testing.assert_array_equal(back["a"], self._tree(2)["a"])
+
+
+class TestElastic:
+    def test_straggler_detector_fires_after_patience(self):
+        det = StragglerDetector(ElasticConfig(straggler_factor=2.0,
+                                              patience=2))
+        assert not det.observe(1.0)
+        assert not det.observe(1.0)
+        assert not det.observe(5.0)   # strike 1
+        assert det.observe(5.0)       # strike 2 -> fire
+
+    def test_straggler_recovers(self):
+        det = StragglerDetector(ElasticConfig(patience=3))
+        det.observe(1.0)
+        det.observe(9.0)
+        assert det.strikes == 1
+        det.observe(1.0)
+        assert det.strikes == 0
+
+    @pytest.mark.parametrize("chips,mp,want", [
+        (512, 16, (32, 16)), (256, 16, (16, 16)), (96, 16, (6, 16)),
+        (100, 16, (25, 4)), (7, 16, (7, 1)),
+    ])
+    def test_plan_remesh(self, chips, mp, want):
+        assert plan_remesh(chips, mp) == want
