@@ -10,11 +10,13 @@ that make the fusion legal on the paper's 128KB+256KB buffers.
 
 from __future__ import annotations
 
-from repro.core.fusion import plan_fusion
+from repro.core.fusion import LayerShape, fused_tile_bytes, plan_fusion
 from repro.core.simulator import dram_energy, simulate_strategies
 from repro.models.dcn_models import DcnNetConfig, layer_shapes
+from repro.runtime import dcn_pipeline
 
-from benchmarks.workloads import NETWORKS, measured_tdt, net_label
+from benchmarks.workloads import (NETWORKS, executor_case, measured_tdt,
+                                  net_label)
 
 BUF_BYTES = 128 * 1024
 ONCHIP_BUDGET = (128 + 256) * 1024  # input + output buffers, Table I
@@ -45,5 +47,36 @@ def run(csv=print):
     return plans
 
 
+def run_executor(csv=print, h: int = 16, w: int = 16, c: int = 16,
+                 c_out: int = 16, tile: int = 8, seed: int = 0):
+    """Measured vs modeled fused working set.
+
+    The fusion planner models the VMEM footprint of one fused tile
+    (``fused_tile_bytes``); the executor's trace records the packed input
+    buffer it actually shipped to the kernel. The measured packed-input
+    bytes are checked against the planner's *input-halo component* (the
+    term that models exactly that buffer) — a packing blow-up trips the
+    check even though the full fused envelope would hide it — and the
+    total envelope is reported alongside.
+    """
+    params, x = executor_case(h, w, c, c_out, seed)
+    _, trace = dcn_pipeline(x, params, tile=tile, return_trace=True)
+
+    dtype_bytes = x.dtype.itemsize
+    shape = LayerShape(h=h, w=w, c_in=c, c_out=c_out, kernel_size=3,
+                       dtype_bytes=dtype_bytes)
+    modeled_total = fused_tile_bytes(shape, tile * tile)
+    # The planner's input-halo term (fusion.fused_tile_bytes, halo=2):
+    # the component that models the packed input buffer specifically.
+    modeled_input = (3 * tile) ** 2 * c * dtype_bytes
+    measured = trace.images[0].max_buffer_bytes
+    csv(f"fusion_xcheck,measured_packed_input_bytes={measured},"
+        f"modeled_input_halo_bytes={modeled_input},"
+        f"modeled_fused_tile_bytes={modeled_total},"
+        f"within_input_halo={'yes' if measured <= modeled_input else 'NO'}")
+    return measured, modeled_input, modeled_total
+
+
 if __name__ == "__main__":
     run()
+    run_executor()

@@ -14,11 +14,16 @@ ours.
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.deform import conv2d, offsets_to_coords
 from repro.core.simulator import dram_energy, simulate_strategies
+from repro.core.tiles import TileGrid, per_pixel_input_tiles, tdt_from_coords
+from repro.runtime import dcn_pipeline
 
-from benchmarks.workloads import NETWORKS, measured_tdt, net_label
+from benchmarks.workloads import (NETWORKS, executor_case, measured_tdt,
+                                  net_label)
 
 BUF_BYTES = 128 * 1024  # paper Table I input buffer
 
@@ -60,5 +65,49 @@ def run(csv=print):
     return reports
 
 
+def run_executor(csv=print, h: int = 24, w: int = 24, c: int = 16,
+                 c_out: int = 16, tile: int = 8, buffer_tiles: int = 4,
+                 seed: int = 0):
+    """Simulator-vs-executor cross-check on one real deformable layer.
+
+    Runs the tile-pipeline executor (repro.runtime) on a real batch and
+    compares its *actual* packed-tile traffic against the traffic
+    simulator's predictions for the same coordinates/grid/buffer:
+
+      * FIFO-replayed executed loads  == simulator "scheduled" tile loads
+        (exact: same TDT, same Algorithm-1 schedule, same FIFO model);
+      * no-reuse packed tile count    == the TDT's total dependency count,
+        an upper bound the "bitvec" strategy improves on.
+    """
+    params, x = executor_case(h, w, c, c_out, seed)
+    _, trace = dcn_pipeline(x, params, tile=tile, buffer_tiles=buffer_tiles,
+                            return_trace=True)
+
+    offsets = conv2d(x, params.w_off, params.b_off)
+    coords = offsets_to_coords(offsets.astype(jnp.float32), 3, "dcn2")[0]
+    grid = TileGrid(h, w, tile, tile)
+    B = np.asarray(tdt_from_coords(coords, grid, grid))
+    pp = np.asarray(per_pixel_input_tiles(coords, grid))
+    dtype_bytes = x.dtype.itemsize
+    tile_bytes = grid.tile_bytes(c, dtype_bytes)
+    reports = simulate_strategies(B, pp, grid, channels=c, c_out=c_out,
+                                  kernel_size=3,
+                                  buffer_bytes=buffer_tiles * tile_bytes,
+                                  dtype_bytes=dtype_bytes)
+
+    sim = reports["scheduled"]
+    exec_fifo = trace.fifo_loads()
+    csv(f"executor_xcheck,sim_scheduled_loads={sim.tile_loads},"
+        f"exec_fifo_loads={exec_fifo},"
+        f"match={'yes' if sim.tile_loads == exec_fifo else 'NO'}")
+    csv(f"executor_xcheck,sim_scheduled_bytes={sim.input_read_bytes},"
+        f"exec_fifo_bytes={exec_fifo * tile_bytes},"
+        f"exec_packed_bytes_no_reuse={trace.packed_bytes},"
+        f"tdt_dep_count={int(B.sum())},"
+        f"exec_packed_tiles={trace.packed_tile_loads}")
+    return reports, trace
+
+
 if __name__ == "__main__":
     run()
+    run_executor()

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.deform import conv2d, init_deformable_conv, offsets_to_coords
+from repro.core.deform import (conv2d, init_deformable_conv,
+                               offsets_to_coords, randomize_offset_conv)
 from repro.core.tiles import (TileGrid, make_square_grid,
                               per_pixel_input_tiles, tdt_from_coords)
 from repro.data import DataConfig, image_batch
@@ -85,6 +86,19 @@ def build_workload(name: str, n_deform: int, variant: str,
     return Workload(conv_f, off_f, bli_f, dconv_f, dbytes, tbytes)
 
 
+def executor_case(h: int, w: int, c: int, c_out: int, seed: int = 0,
+                  offset_scale: float = 4.0):
+    """Random deformable layer + input batch for the executor
+    cross-checks (bench_scheduling / bench_fusion): non-zero offset conv
+    so the sampling pattern is genuinely irregular."""
+    key = jax.random.PRNGKey(seed)
+    params = randomize_offset_conv(init_deformable_conv(key, c, c_out),
+                                   jax.random.fold_in(key, 1),
+                                   offset_scale / c)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, h, w, c))
+    return params, x
+
+
 @functools.lru_cache(maxsize=32)
 def measured_tdt(h: int = 56, w: int = 56, c: int = 256,
                  tiles_per_side: int = 5, seed: int = 0,
@@ -93,10 +107,9 @@ def measured_tdt(h: int = 56, w: int = 56, c: int = 256,
     TDT from the resulting coordinates (the paper's §III methodology, VGG16
     conv3-scale layer). Returns (B, per_pixel_tiles, grid)."""
     key = jax.random.PRNGKey(seed)
-    params = init_deformable_conv(key, c, c)
-    params = params._replace(
-        w_off=jax.random.normal(jax.random.fold_in(key, 1),
-                                params.w_off.shape) * (offset_scale / c))
+    params = randomize_offset_conv(init_deformable_conv(key, c, c),
+                                   jax.random.fold_in(key, 1),
+                                   offset_scale / c)
     img = image_batch(DataConfig(seed=seed, global_batch=1), 0, img=h,
                       channels=3)["images"]
     x = jnp.tile(jnp.asarray(img), (1, 1, 1, c // 3 + 1))[..., :c]

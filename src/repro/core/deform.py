@@ -71,6 +71,16 @@ def init_deformable_conv(
     return DeformableConvParams(w_off, b_off, w, b)
 
 
+def randomize_offset_conv(params: DeformableConvParams, key: jax.Array,
+                          scale: float) -> DeformableConvParams:
+    """Replace the (zero-initialised) offset-conv weights with Gaussian
+    noise of the given scale — the canonical way tests and benchmarks
+    create genuinely irregular sampling patterns."""
+    w_off = jax.random.normal(key, params.w_off.shape,
+                              params.w_off.dtype) * scale
+    return params._replace(w_off=w_off.astype(params.w_off.dtype))
+
+
 def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
            stride: int = 1, padding: str = "SAME") -> jax.Array:
     """Standard NHWC conv (stages 1 and 3 building block)."""

@@ -20,7 +20,7 @@ from repro.kernels.dcn_bli import bli_tile_matmul
 from repro.kernels.dcn_fused import dcn_fused_tile
 
 
-def _round_up(x: int, m: int) -> int:
+def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
@@ -52,8 +52,8 @@ def bli_pallas(x: jax.Array, coords: jax.Array, *,
     idx, coeff = coords_to_idx_coeff(coords, h, w)
 
     p = h * w * kk
-    p_pad = _round_up(p, 128)
-    c_pad = _round_up(c, 128)
+    p_pad = round_up(p, 128)
+    c_pad = round_up(c, 128)
 
     x_flat = x.reshape(n, h * w, c)
     if c_pad != c:
@@ -97,7 +97,7 @@ def deformable_conv2d_pallas(
     idx, coeff = coords_to_idx_coeff(coords, h, w)                   # (N,H,W,KK,4)
 
     p = h * w
-    p_pad = _round_up(p, 128)
+    p_pad = round_up(p, 128)
     idx_f = idx.reshape(n, p, kk, 4)
     coeff_f = coeff.reshape(n, p, kk, 4)
     if p_pad != p:

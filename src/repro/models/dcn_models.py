@@ -6,8 +6,15 @@ Replacement proceeds from the output layer toward the input layer ("we
 have deformable convolution placed from the output layer to input layer
 ... to minimize the deformable convolution induced computation").
 
-The forward pass threads a ``use_pallas`` switch: False -> XLA reference
-path (repro.core.deform), True -> fused Pallas kernels (repro.kernels).
+The forward pass selects an execution ``backend`` per deformable layer:
+
+  * ``"xla"``      — reference path (repro.core.deform); differentiable.
+  * ``"pallas"``   — whole-plane fused Pallas kernels (repro.kernels).
+  * ``"pipeline"`` — the scheduler-driven tile-pipeline executor
+                     (repro.runtime): TDT -> Algorithm-1 schedule ->
+                     packed-tile fused-kernel dispatches. Forward only.
+
+The legacy ``use_pallas`` flag maps to ``backend="pallas"``.
 ``layer_shapes`` feeds the traffic simulator / fusion planner benchmarks.
 """
 
@@ -24,6 +31,7 @@ from repro.core.deform import (DeformableConvParams, conv2d,
                                init_deformable_conv)
 from repro.core.fusion import LayerShape
 from repro.kernels.ops import deformable_conv2d_pallas
+from repro.runtime.pipeline import PipelineConfig, dcn_pipeline
 
 # (channels, n_convs) per VGG19 stage; maxpool after each stage.
 _VGG19_STAGES = ((64, 2), (128, 2), (256, 4), (512, 4), (512, 4))
@@ -106,9 +114,18 @@ def _pool_positions(cfg: DcnNetConfig) -> set[int]:
 
 
 def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
-                  fused: bool = True):
+                  fused: bool = True, backend: str | None = None,
+                  pipeline: PipelineConfig | None = None):
     """x: (N, H, W, C). Returns logits (N, classes) for vgg19 or per-pixel
-    logits (N, H', W', classes) for segnet."""
+    logits (N, H', W', classes) for segnet.
+
+    backend: "xla" (default), "pallas", or "pipeline" (the tile-pipeline
+    executor, configured by ``pipeline``); overrides ``use_pallas``.
+    """
+    if backend is None:
+        backend = "pallas" if use_pallas else "xla"
+    if backend not in ("xla", "pallas", "pipeline"):
+        raise ValueError(f"unknown backend: {backend!r}")
     decoder = cfg.name == "segnet"
     plan = cfg.stage_plan(decoder)
     pools = _pool_positions(cfg)
@@ -116,7 +133,13 @@ def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
 
     def run_conv(p, x, deform):
         if deform:
-            if use_pallas:
+            if backend == "pipeline":
+                pcfg = pipeline or PipelineConfig(
+                    tile=max(2, min(8, x.shape[1] // 2, x.shape[2] // 2)))
+                return dcn_pipeline(x, p, variant=cfg.variant,
+                                    max_displacement=cfg.max_displacement,
+                                    config=pcfg)
+            if backend == "pallas":
                 return deformable_conv2d_pallas(
                     x, p, variant=cfg.variant,
                     max_displacement=cfg.max_displacement)

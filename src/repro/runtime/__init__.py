@@ -1,0 +1,40 @@
+"""Tile-pipeline runtime — the paper's end-to-end execution path.
+
+Connects the previously independent components into one runnable
+accelerator model, per batch element and layer:
+
+  stage 1   offset conv -> sampling coordinates      (core.deform)
+  TDT       coords -> tile dependency table          (core.tiles)
+  schedule  Algorithm 1 / sequential ordering        (core.scheduler)
+  pack      halo/dependent input tiles + per-pixel
+            (idx, coeff) tensors, padded for shapes
+            not divisible by the tile size           (runtime.packing)
+  execute   fused BLI(+)conv Pallas kernel per
+            schedule entry, scattered back into the
+            (N, H, W, C_out) output                  (kernels.dcn_fused)
+
+The executor also emits a ``PipelineTrace`` whose packed-tile byte counts
+can be compared against the DRAM-traffic simulator's predictions
+(benchmarks/bench_scheduling.py, bench_fusion.py).
+"""
+
+from repro.runtime.packing import (
+    NeighbourTables,
+    build_neighbour_tables,
+    pack_output_tile,
+    plane_to_tiles,
+)
+from repro.runtime.pipeline import PipelineConfig, dcn_pipeline
+from repro.runtime.trace import ImageTrace, PipelineTrace, TileRecord
+
+__all__ = [
+    "NeighbourTables",
+    "build_neighbour_tables",
+    "pack_output_tile",
+    "plane_to_tiles",
+    "PipelineConfig",
+    "dcn_pipeline",
+    "ImageTrace",
+    "PipelineTrace",
+    "TileRecord",
+]

@@ -1,0 +1,132 @@
+"""Host-side tile packing for the pipeline executor.
+
+The fused Pallas kernel (``kernels.dcn_fused``) consumes a flat packed
+input buffer ``x_packed (S, C)`` plus per-output-pixel ``(idx, coeff)``
+tensors whose indices address *that buffer* — the software analogue of the
+paper's on-chip input buffer and address converter (Eq. 4): global
+``(row, col)`` sample coordinates are rewritten into buffer-local
+addresses ``slot(tile) * tile_pixels + offset_in_tile``.
+
+Shapes that do not divide by the tile size are handled by padding the
+feature plane up to ``rows*th x cols*tw``: sampling coordinates are
+clamped in-range upstream (``core.deform.offsets_to_coords``), so padded
+pixels are never addressed, and padded *output* pixels are packed with
+``coeff = 0`` and discarded on scatter.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deform import bli_coefficients
+from repro.core.tiles import TileGrid
+
+
+def plane_to_tiles(x: jax.Array, grid: TileGrid) -> jax.Array:
+    """(H, W, C) -> (num_tiles, th*tw, C), zero-padded to the tile grid."""
+    h, w, c = x.shape
+    hp, wp = grid.rows * grid.th, grid.cols * grid.tw
+    if (hp, wp) != (h, w):
+        x = jnp.pad(x, ((0, hp - h), (0, wp - w), (0, 0)))
+    x = x.reshape(grid.rows, grid.th, grid.cols, grid.tw, c)
+    return x.transpose(0, 2, 1, 3, 4).reshape(grid.num_tiles,
+                                              grid.th * grid.tw, c)
+
+
+def tiles_to_plane(y_tiles: jax.Array, grid: TileGrid, h: int, w: int,
+                   ) -> jax.Array:
+    """(num_tiles, th*tw, C) -> (H, W, C): inverse of ``plane_to_tiles``."""
+    c = y_tiles.shape[-1]
+    y = y_tiles.reshape(grid.rows, grid.cols, grid.th, grid.tw, c)
+    y = y.transpose(0, 2, 1, 3, 4).reshape(grid.rows * grid.th,
+                                           grid.cols * grid.tw, c)
+    return y[:h, :w]
+
+
+class NeighbourTables(NamedTuple):
+    """Per-pixel BLI neighbour data in host memory (one image).
+
+    All arrays are (H, W, KK, 4) over the 4 integer-grid neighbours in the
+    order (r0,c0) (r0,c1) (r1,c0) (r1,c1) — matching Eq. 5 / the kernels.
+    """
+
+    tile_id: np.ndarray   # int32 input-tile id of each neighbour
+    offset: np.ndarray    # int32 raster offset of the neighbour in its tile
+    coeff: np.ndarray     # float32 BLI coefficients (eta, theta, mu, gamma)
+
+
+def build_neighbour_tables(coords: jax.Array, grid: TileGrid,
+                           ) -> NeighbourTables:
+    """coords (H, W, KK, 2) float -> host-side neighbour tables.
+
+    Uses the exact clipping/coefficient rules of the XLA reference
+    (``core.deform.bilinear_sample``) so the pipeline is bit-compatible
+    with it up to matmul association order.
+    """
+    floor_rc, coeffs = bli_coefficients(coords)
+    floor_rc = np.asarray(floor_rc)
+    r0 = np.clip(floor_rc[..., 0], 0, grid.h - 1)
+    c0 = np.clip(floor_rc[..., 1], 0, grid.w - 1)
+    r1 = np.clip(r0 + 1, 0, grid.h - 1)
+    c1 = np.clip(c0 + 1, 0, grid.w - 1)
+    nb_r = np.stack([r0, r0, r1, r1], axis=-1)
+    nb_c = np.stack([c0, c1, c0, c1], axis=-1)
+    tile_id = (nb_r // grid.th) * grid.cols + (nb_c // grid.tw)
+    offset = (nb_r % grid.th) * grid.tw + (nb_c % grid.tw)
+    return NeighbourTables(tile_id.astype(np.int32),
+                           offset.astype(np.int32),
+                           np.asarray(coeffs, np.float32))
+
+
+def pack_output_tile(
+    nb: NeighbourTables,
+    grid: TileGrid,
+    out_tile: int,
+    dep_tiles: list[int],
+    p_pad: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Build the kernel's (idx, coeff) operands for one output tile.
+
+    Rewrites each neighbour's global (tile_id, offset) into an address in
+    the packed buffer that concatenates ``dep_tiles`` in load order:
+    ``slot * tile_pixels + offset``. Output pixels beyond the real plane
+    (tile overhangs the H x W extent) get ``coeff = 0`` so they contribute
+    zeros that the scatter discards.
+
+    Returns idx (p_pad, KK, 4) int32 and coeff (p_pad, KK, 4) float32.
+    """
+    th, tw, cols = grid.th, grid.tw, grid.cols
+    tp = th * tw
+    kk = nb.coeff.shape[2]
+
+    slot = np.zeros(grid.num_tiles, np.int32)
+    slot[np.asarray(dep_tiles, np.int64)] = np.arange(len(dep_tiles),
+                                                      dtype=np.int32)
+
+    tr, tc = divmod(out_tile, cols)
+    rr = np.arange(tr * th, (tr + 1) * th)
+    cc = np.arange(tc * tw, (tc + 1) * tw)
+    valid = (rr[:, None] < grid.h) & (cc[None, :] < grid.w)    # (th, tw)
+    rr_c = np.minimum(rr, grid.h - 1)
+    cc_c = np.minimum(cc, grid.w - 1)
+
+    t_ids = nb.tile_id[rr_c][:, cc_c]                          # (th,tw,KK,4)
+    offs = nb.offset[rr_c][:, cc_c]
+    cfs = nb.coeff[rr_c][:, cc_c] * valid[..., None, None]
+
+    # TDT guarantee: every neighbour tile of a real pixel in ``out_tile``
+    # is in ``dep_tiles``; padded pixels carry coeff 0 and may point at
+    # slot 0 harmlessly.
+    idx = slot[t_ids] * tp + offs
+    idx = np.where(valid[..., None, None], idx, 0).astype(np.int32)
+
+    idx = idx.reshape(tp, kk, 4)
+    cfs = cfs.reshape(tp, kk, 4).astype(np.float32)
+    if p_pad != tp:
+        idx = np.pad(idx, ((0, p_pad - tp), (0, 0), (0, 0)))
+        cfs = np.pad(cfs, ((0, p_pad - tp), (0, 0), (0, 0)))
+    return idx, cfs

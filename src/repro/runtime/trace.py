@@ -1,0 +1,81 @@
+"""Execution traces of the tile-pipeline executor.
+
+The trace is the executor-side counterpart of the DRAM-traffic simulator
+(``repro.core.simulator``): where the simulator *predicts* tile loads from
+the TDT and a FIFO buffer model, the trace records what the executor
+*actually packed and dispatched*. Replaying the recorded load sequence
+through the same ``FifoBuffer`` must reproduce the simulator's scheduled
+tile-load count exactly — benchmarks/bench_scheduling.py asserts this.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.scheduler import FifoBuffer
+from repro.core.tiles import TileGrid
+
+
+@dataclass(frozen=True)
+class TileRecord:
+    """One schedule entry as executed: output tile + what was packed."""
+
+    out_tile: int
+    dep_tiles: tuple[int, ...]   # input tiles packed, in load order
+    loaded_bytes: int            # len(dep_tiles) * tile_bytes (no reuse)
+    buffer_bytes: int            # padded on-chip packed buffer (S * C * b)
+
+
+@dataclass
+class ImageTrace:
+    """Trace of one batch element through one deformable layer."""
+
+    grid: TileGrid
+    tile_bytes: int              # one input tile, in the executed dtype
+    buffer_tiles: int            # M used for scheduling
+    schedule: str                # "alg1" | "sequential"
+    records: list[TileRecord] = field(default_factory=list)
+
+    @property
+    def packed_tile_loads(self) -> int:
+        """Input tiles packed with no cross-tile reuse (upper bound)."""
+        return sum(len(r.dep_tiles) for r in self.records)
+
+    @property
+    def packed_bytes(self) -> int:
+        return sum(r.loaded_bytes for r in self.records)
+
+    @property
+    def max_buffer_bytes(self) -> int:
+        return max((r.buffer_bytes for r in self.records), default=0)
+
+    def fifo_replay(self, buffer_tiles: int | None = None) -> FifoBuffer:
+        """Replay the executed load sequence through the FIFO buffer model.
+
+        With ``buffer_tiles`` equal to the simulator's capacity this yields
+        exactly the simulator's tile-load count for the same schedule.
+        """
+        buf = FifoBuffer(self.buffer_tiles if buffer_tiles is None
+                         else buffer_tiles)
+        for r in self.records:
+            for t in r.dep_tiles:
+                buf.touch(t)
+        return buf
+
+
+@dataclass
+class PipelineTrace:
+    """Per-image traces of one ``dcn_pipeline`` call."""
+
+    images: list[ImageTrace] = field(default_factory=list)
+
+    @property
+    def packed_bytes(self) -> int:
+        return sum(im.packed_bytes for im in self.images)
+
+    @property
+    def packed_tile_loads(self) -> int:
+        return sum(im.packed_tile_loads for im in self.images)
+
+    def fifo_loads(self, buffer_tiles: int | None = None) -> int:
+        return sum(im.fifo_replay(buffer_tiles).loads for im in self.images)

@@ -75,6 +75,26 @@ class TestDeformableConv:
         for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
             np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
 
+    def test_fused_grads_match_wrt_input_and_dcn1(self):
+        """Checkpoint-path gradients agree with the reference for d/dx as
+        well as d/dparams, across variants and with offset clamping."""
+        key = jax.random.PRNGKey(8)
+        params = init_deformable_conv(key, 4, 4, variant="dcn1")
+        params = params._replace(
+            w_off=jax.random.normal(key, params.w_off.shape) * 0.5)
+        x = jax.random.normal(jax.random.PRNGKey(9), (1, 8, 8, 4))
+
+        def loss(fn, x, p):
+            return (fn(x, p, variant="dcn1", max_displacement=2.0) ** 2).sum()
+
+        gx1, gp1 = jax.grad(lambda x, p: loss(deformable_conv2d, x, p),
+                            argnums=(0, 1))(x, params)
+        gx2, gp2 = jax.grad(lambda x, p: loss(fused_deformable_conv2d, x, p),
+                            argnums=(0, 1))(x, params)
+        np.testing.assert_allclose(gx1, gx2, rtol=1e-4, atol=1e-4)
+        for a, b in zip(jax.tree.leaves(gp1), jax.tree.leaves(gp2)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
     def test_max_displacement_clamps(self):
         offsets = jnp.full((1, 4, 4, 18), 100.0)
         coords = offsets_to_coords(offsets, 3, "dcn2", max_displacement=2.0)
@@ -130,6 +150,59 @@ class TestScheduler:
         assert not buf.touch(3)       # evicts 1 (FIFO: 1 oldest)
         assert not buf.touch(1)       # 1 was evicted -> miss
         assert buf.loads == 4 and buf.hits == 1
+
+    def test_schedule_is_permutation_on_random_coord_fields(self):
+        """Every schedule is a permutation of the output tiles that have
+        dependencies — on measured TDTs, not just synthetic matrices."""
+        h = w = 24
+        grid = make_square_grid(h, w, 4)
+        for seed in range(4):
+            coords = _rand_coords(jax.random.PRNGKey(100 + seed), h, w, 9)
+            B = np.asarray(tdt_from_coords(coords, grid, grid))
+            for m in (1, 4, grid.num_tiles):
+                s = schedule_tiles(B, m)
+                dep_rows = np.flatnonzero(B.any(axis=1)).tolist()
+                assert sorted(s.oid) == dep_rows
+                assert len(s.oid) == len(set(s.oid))  # no repeats
+                for o, loads in zip(s.oid, s.iid):
+                    assert sorted(loads) == np.flatnonzero(B[o]).tolist()
+
+    def test_fifo_occupancy_matches_independent_model(self):
+        """Replaying real schedules: every hit/miss decision and the
+        resident set match an independent deque FIFO model, and occupancy
+        never exceeds M (the paper's input buffer is a hard capacity)."""
+        from collections import deque
+        h = w = 20
+        grid = make_square_grid(h, w, 5)
+        coords = _rand_coords(jax.random.PRNGKey(9), h, w, 9)
+        B = np.asarray(tdt_from_coords(coords, grid, grid))
+        for m in (1, 2, 5):
+            buf = FifoBuffer(m)
+            model = deque(maxlen=m)  # append on full evicts the oldest
+            for loads in schedule_tiles(B, m).iid:
+                for t in loads:
+                    assert buf.touch(t) == (t in model)
+                    if t not in model:
+                        model.append(t)
+                    assert len(buf.resident) <= m
+                    assert set(buf.queue) == buf.resident == set(model)
+
+    def test_traffic_ordering_on_random_coord_fields(self):
+        """Paper Fig. 16 invariant, scheduled <= bitvec <= naive, holds on
+        random coordinate fields across seeds and buffer sizes."""
+        h = w = 24
+        grid = make_square_grid(h, w, 4)
+        for seed in range(4):
+            coords = _rand_coords(jax.random.PRNGKey(200 + seed), h, w, 9)
+            B = np.asarray(tdt_from_coords(coords, grid, grid))
+            pp = np.asarray(per_pixel_input_tiles(coords, grid))
+            for buf_tiles in (2, 4, 8):
+                rep = simulate_strategies(
+                    B, pp, grid, channels=8, c_out=8, kernel_size=3,
+                    buffer_bytes=buf_tiles * grid.tile_bytes(8))
+                assert (rep["scheduled"].tile_loads
+                        <= rep["bitvec"].tile_loads
+                        <= rep["naive"].tile_loads)
 
     def test_scheduled_never_worse_than_sequential(self):
         for seed in range(5):

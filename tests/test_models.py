@@ -124,6 +124,8 @@ class TestMoe:
 class TestLmConsistency:
     """Teacher-forced decode must reproduce the training forward."""
 
+    pytestmark = pytest.mark.slow  # heaviest suite: full-arch decode loops
+
     @pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-27b",
                                       "jamba-v0.1-52b", "xlstm-1.3b",
                                       "deepseek-v3-671b"])
@@ -163,6 +165,8 @@ class TestLmConsistency:
 class TestArchSmoke:
     """Every assigned arch: reduced config, one forward/train step on CPU,
     output shapes + no NaNs (deliverable f)."""
+
+    pytestmark = pytest.mark.slow  # full-arch train/decode steps, ~1min
 
     @pytest.mark.parametrize("arch", configs.ARCHS)
     def test_train_step_finite(self, arch):

@@ -3,6 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests are optional extras")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.scheduler import FifoBuffer, schedule_tiles, sequential_schedule
