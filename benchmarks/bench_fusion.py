@@ -22,10 +22,12 @@ BUF_BYTES = 128 * 1024
 ONCHIP_BUDGET = (128 + 256) * 1024  # input + output buffers, Table I
 
 
-def run(csv=print):
-    B, pp, grid = measured_tdt()
+def run(csv=print, tdt_kwargs: dict | None = None, channels: int = 256,
+        c_out: int = 256):
+    """``tdt_kwargs`` forwards to ``measured_tdt`` (smoke runs shrink it)."""
+    B, pp, grid = measured_tdt(**(tdt_kwargs or {}))
     for name, nd in NETWORKS:
-        kw = dict(in_grid=grid, channels=256, c_out=256, kernel_size=3,
+        kw = dict(in_grid=grid, channels=channels, c_out=c_out, kernel_size=3,
                   buffer_bytes=BUF_BYTES)
         fused = simulate_strategies(B, pp, fused=True, **kw)["scheduled"]
         staged = simulate_strategies(B, pp, fused=False, **kw)["scheduled"]

@@ -34,10 +34,12 @@ def _deform_intensity(n_deform: int) -> float:
     return {3: 0.12, 8: 0.45, -1: 1.0}[n_deform]
 
 
-def run(csv=print):
-    B, pp, grid = measured_tdt()
-    reports = simulate_strategies(B, pp, grid, channels=256, c_out=256,
-                                  kernel_size=3, buffer_bytes=BUF_BYTES)
+def run(csv=print, tdt_kwargs: dict | None = None, channels: int = 256,
+        c_out: int = 256, buffer_bytes: int = BUF_BYTES):
+    """``tdt_kwargs`` forwards to ``measured_tdt`` (smoke runs shrink it)."""
+    B, pp, grid = measured_tdt(**(tdt_kwargs or {}))
+    reports = simulate_strategies(B, pp, grid, channels=channels, c_out=c_out,
+                                  kernel_size=3, buffer_bytes=buffer_bytes)
     base_loads = {k: r.tile_loads for k, r in reports.items()}
     csv(f"fig16_layer,naive_loads={base_loads['naive']},"
         f"bitvec_loads={base_loads['bitvec']},"

@@ -1,0 +1,93 @@
+"""Benchmark smoke driver: tiny configs -> ``BENCH_*.json`` artifacts.
+
+Runs bench_scheduling, bench_fusion and bench_graph on configurations
+small enough for a CPU CI worker (a couple of minutes total) and writes
+one JSON file per benchmark so the CI can archive the perf trajectory:
+
+  PYTHONPATH=src python benchmarks/smoke.py --out bench-artifacts
+
+Each file carries the emitted csv lines verbatim plus parsed key=value
+fields, so downstream tooling can diff runs without re-parsing logs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:          # allow `python benchmarks/smoke.py`
+    sys.path.insert(0, _ROOT)
+
+from benchmarks import bench_fusion, bench_graph, bench_scheduling  # noqa: E402
+
+TINY_TDT = dict(h=16, w=16, c=16, tiles_per_side=4)
+
+
+def _parse_fields(line: str) -> dict:
+    fields = {}
+    for part in line.split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            fields[k] = v
+    return fields
+
+
+def _collect(name: str, steps) -> dict:
+    lines: list[str] = []
+    for fn, kwargs in steps:
+        fn(csv=lines.append, **kwargs)
+    for ln in lines:
+        print(ln)
+    return {
+        "bench": name,
+        "config": "smoke-tiny",
+        "lines": lines,
+        "records": [dict(label=ln.split(",", 1)[0], **_parse_fields(ln))
+                    for ln in lines],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=".", help="output directory")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    suites = {
+        "BENCH_scheduling.json": _collect("scheduling", [
+            (bench_scheduling.run, dict(tdt_kwargs=TINY_TDT, channels=16,
+                                        c_out=16, buffer_bytes=4096)),
+            (bench_scheduling.run_executor, dict(h=16, w=16, c=8, c_out=8,
+                                                 tile=8, buffer_tiles=2)),
+        ]),
+        "BENCH_fusion.json": _collect("fusion", [
+            (bench_fusion.run, dict(tdt_kwargs=TINY_TDT, channels=16,
+                                    c_out=16)),
+            (bench_fusion.run_executor, dict(h=16, w=16, c=8, c_out=8,
+                                             tile=8)),
+        ]),
+        "BENCH_graph.json": _collect("graph", [
+            (bench_graph.run, dict(img=13, n_deform=2, width_mult=0.125,
+                                   tile=4)),
+            (bench_graph.run_model_backend, dict(img=16, n_deform=2,
+                                                 width_mult=0.125, tile=4)),
+        ]),
+    }
+
+    meta = {"python": platform.python_version(),
+            "platform": platform.platform()}
+    for fname, payload in suites.items():
+        payload["meta"] = meta
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

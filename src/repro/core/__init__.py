@@ -17,7 +17,15 @@ from repro.core.deform import (
     init_deformable_conv,
     offsets_to_coords,
 )
-from repro.core.fusion import FusionMode, FusionPlan, LayerShape, plan_fusion
+from repro.core.fusion import (
+    FusionMode,
+    FusionPlan,
+    GroupPlan,
+    LayerShape,
+    plan_fused_groups,
+    plan_fusion,
+    plan_network,
+)
 from repro.core.scheduler import (
     FifoBuffer,
     TileSchedule,
@@ -26,15 +34,22 @@ from repro.core.scheduler import (
 )
 from repro.core.simulator import (
     DramEnergyModel,
+    GroupTrafficReport,
+    NetworkTrafficReport,
     TrafficReport,
     dram_energy,
+    simulate_group,
+    simulate_network,
     simulate_strategies,
 )
 from repro.core.tiles import (
     TileGrid,
     access_histogram,
+    compose_tdt,
+    compose_tdt_chain,
     make_square_grid,
     per_pixel_input_tiles,
     tdt_from_coords,
+    tdt_standard_conv,
     tile_access_histogram,
 )

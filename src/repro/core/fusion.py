@@ -79,6 +79,7 @@ def plan_fusion(shape: LayerShape, onchip_budget_bytes: int,
     total_pixels = shape.h * shape.w
     kk2 = shape.kernel_size ** 2
     saved = 2 * total_pixels * kk2 * shape.c_in * shape.dtype_bytes
+    min_tile_pixels = min(min_tile_pixels, total_pixels)  # tiny planes fuse
 
     t = 1 << (total_pixels - 1).bit_length()  # >= total_pixels, pow2
     while t >= min_tile_pixels:
@@ -95,3 +96,54 @@ def plan_fusion(shape: LayerShape, onchip_budget_bytes: int,
 def plan_network(shapes: list[LayerShape], onchip_budget_bytes: int
                  ) -> list[FusionPlan]:
     return [plan_fusion(s, onchip_budget_bytes) for s in shapes]
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    """One *cross-layer* fused group: consecutive layers whose boundary
+    feature planes never round-trip through DRAM (§IV-D taken network-wide,
+    Fig. 18). ``start``/``stop`` index the layer-shape chain half-open."""
+
+    start: int
+    stop: int
+    plans: tuple[FusionPlan, ...]
+    dram_bytes_saved: int     # interior boundary planes (write+read) elided
+
+    @property
+    def n_layers(self) -> int:
+        return self.stop - self.start
+
+
+def plan_fused_groups(shapes: list[LayerShape], onchip_budget_bytes: int,
+                      ) -> list[GroupPlan]:
+    """Partition a chain of same-resolution layers into fused groups.
+
+    Layers whose per-layer plan is FUSED are merged into maximal runs; a
+    STAGED layer (its fused tile cannot fit on-chip even at the minimum
+    tile size) becomes a singleton group whose boundaries materialize.
+    The interior boundary planes of a multi-layer group are the §IV-D
+    saving, counted as one write plus one read of each interior plane.
+    """
+    plans = plan_network(shapes, onchip_budget_bytes)
+    groups: list[GroupPlan] = []
+    run_start: int | None = None
+
+    def flush(stop: int) -> None:
+        nonlocal run_start
+        if run_start is None:
+            return
+        saved = sum(2 * shapes[j].h * shapes[j].w * shapes[j].c_out
+                    * shapes[j].dtype_bytes
+                    for j in range(run_start, stop - 1))
+        groups.append(GroupPlan(run_start, stop,
+                                tuple(plans[run_start:stop]), saved))
+        run_start = None
+
+    for i, p in enumerate(plans):
+        if p.mode is FusionMode.STAGED:
+            flush(i)
+            groups.append(GroupPlan(i, i + 1, (p,), 0))
+        elif run_start is None:
+            run_start = i
+    flush(len(plans))
+    return groups

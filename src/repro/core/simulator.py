@@ -30,7 +30,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .scheduler import FifoBuffer, TileSchedule, schedule_tiles, sequential_schedule
-from .tiles import TileGrid
+from .tiles import TileGrid, compose_tdt_chain
 
 # ---------------------------------------------------------------------------
 # DRAM energy model (paper Table II, Micron DDR3 power calculator)
@@ -158,6 +158,119 @@ def simulate_strategies(
         "bitvec": report("bitvec", bitvec_buf),
         "scheduled": report("scheduled", sched_buf),
     }
+
+
+# ---------------------------------------------------------------------------
+# Network-level traffic (cross-layer fusion, §IV-D taken network-wide)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GroupTrafficReport:
+    """Predicted DRAM traffic of one fused group (or its per-layer run)."""
+
+    n_layers: int
+    tile_loads: int            # input tiles fetched from DRAM
+    reuse_hits: int
+    input_read_bytes: int
+    intermediate_bytes: int    # interior boundary-plane writes (0 if fused)
+    output_write_bytes: int    # group output plane
+    weight_read_bytes: int
+
+    @property
+    def total_dram_bytes(self) -> int:
+        return (self.input_read_bytes + self.intermediate_bytes
+                + self.output_write_bytes + self.weight_read_bytes)
+
+
+@dataclass
+class NetworkTrafficReport:
+    """Whole-network traffic: per-group reports + dense boundary ops."""
+
+    mode: str                  # "fused" | "layerwise"
+    groups: list[GroupTrafficReport]
+    boundary_bytes: int = 0    # pool/upsample plane read+write between groups
+
+    @property
+    def tile_loads(self) -> int:
+        return sum(g.tile_loads for g in self.groups)
+
+    @property
+    def total_dram_bytes(self) -> int:
+        return sum(g.total_dram_bytes for g in self.groups) + self.boundary_bytes
+
+
+def _schedule_and_replay(B: np.ndarray, buffer_tiles: int,
+                         schedule: str) -> FifoBuffer:
+    if schedule == "alg1":
+        sched = schedule_tiles(B, buffer_tiles)
+    elif schedule == "sequential":
+        sched = sequential_schedule(B)
+    else:
+        raise ValueError(f"unknown schedule: {schedule!r}")
+    return _replay(sched, buffer_tiles)
+
+
+def simulate_group(
+    b_layers: list[np.ndarray],
+    grid: TileGrid,
+    layer_channels: list[tuple[int, int]],
+    weight_bytes: int,
+    buffer_tiles: int,
+    dtype_bytes: int = 1,
+    fused: bool = True,
+    schedule: str = "alg1",
+) -> GroupTrafficReport:
+    """Predict one group's DRAM traffic from its per-layer TDTs.
+
+    ``fused=True`` runs ONE Algorithm-1 schedule over the composite TDT
+    (``compose_tdt`` chained over the group's layers): only group-input
+    tiles are fetched and interior planes stay on-chip. ``fused=False``
+    models the per-layer execution of the same layers: each layer is
+    scheduled on its own TDT, and every interior boundary plane is written
+    to DRAM (its read-back is the next layer's tile loads).
+    """
+    if len(b_layers) != len(layer_channels):
+        raise ValueError("need one (c_in, c_out) pair per layer TDT")
+    h, w = grid.h, grid.w
+    if fused:
+        comp = compose_tdt_chain(b_layers)
+        buf = _schedule_and_replay(comp, buffer_tiles, schedule)
+        loads, hits = buf.loads, buf.hits
+        input_bytes = loads * grid.tile_bytes(layer_channels[0][0], dtype_bytes)
+        inter_bytes = 0
+    else:
+        loads = hits = input_bytes = 0
+        for b, (c_in, _) in zip(b_layers, layer_channels):
+            buf = _schedule_and_replay(np.asarray(b, bool), buffer_tiles,
+                                       schedule)
+            loads += buf.loads
+            hits += buf.hits
+            input_bytes += buf.loads * grid.tile_bytes(c_in, dtype_bytes)
+        inter_bytes = sum(h * w * c_out * dtype_bytes
+                          for _, c_out in layer_channels[:-1])
+    return GroupTrafficReport(
+        n_layers=len(b_layers),
+        tile_loads=loads,
+        reuse_hits=hits,
+        input_read_bytes=input_bytes,
+        intermediate_bytes=inter_bytes,
+        output_write_bytes=h * w * layer_channels[-1][1] * dtype_bytes,
+        weight_read_bytes=weight_bytes,
+    )
+
+
+def simulate_network(group_specs: list[dict], boundary_bytes: int = 0,
+                     fused: bool = True) -> NetworkTrafficReport:
+    """Network-level §IV-D accounting over pre-built group specs.
+
+    Each spec is a kwargs dict for :func:`simulate_group` (without
+    ``fused``). The executor trace (``runtime.trace.NetworkTrace``) must
+    match the ``fused=True`` prediction exactly — bench_graph asserts it.
+    """
+    reports = [simulate_group(fused=fused, **spec) for spec in group_specs]
+    return NetworkTrafficReport(mode="fused" if fused else "layerwise",
+                                groups=reports, boundary_bytes=boundary_bytes)
 
 
 def dram_energy(report: TrafficReport, exec_time_s: float,

@@ -124,6 +124,40 @@ def tdt_standard_conv(in_grid: TileGrid, out_grid: TileGrid,
     return b
 
 
+def compose_tdt(b_down: np.ndarray, b_up: np.ndarray) -> np.ndarray:
+    """Chain two tile-dependency tables across a layer boundary.
+
+    ``b_up`` describes the upstream layer (its output tiles are the
+    downstream layer's input tiles); ``b_down`` describes the downstream
+    layer. The composition maps downstream *output* tiles all the way to
+    the upstream layer's *input* tiles:
+
+        C[o, i] = OR_m  b_down[o, m] AND b_up[m, i]
+
+    i.e. boolean matrix multiplication. Chaining a DCN layer's measured
+    TDT through downstream standard-conv halos (``tdt_standard_conv``)
+    yields the composite table a cross-layer fused group is scheduled on.
+    """
+    d = np.asarray(b_down, dtype=bool)
+    u = np.asarray(b_up, dtype=bool)
+    if d.shape[1] != u.shape[0]:
+        raise ValueError(
+            f"TDT shapes do not chain: down {d.shape} x up {u.shape}")
+    return (d.astype(np.uint8) @ u.astype(np.uint8)) > 0
+
+
+def compose_tdt_chain(b_layers: list[np.ndarray]) -> np.ndarray:
+    """Composite TDT of a layer chain (``b_layers`` in execution order):
+    last-layer output tiles -> first-layer input tiles. The executor and
+    the network simulator both schedule on exactly this table."""
+    if not b_layers:
+        raise ValueError("empty layer chain")
+    comp = np.asarray(b_layers[-1], bool)
+    for b in b_layers[-2::-1]:
+        comp = compose_tdt(comp, b)
+    return comp
+
+
 def access_histogram(coords: jax.Array, h: int, w: int) -> jax.Array:
     """Per-input-feature utilisation counts (paper Fig. 3a).
 

@@ -13,6 +13,10 @@ The forward pass selects an execution ``backend`` per deformable layer:
   * ``"pipeline"`` — the scheduler-driven tile-pipeline executor
                      (repro.runtime): TDT -> Algorithm-1 schedule ->
                      packed-tile fused-kernel dispatches. Forward only.
+  * ``"graph"``    — the network-graph executor with cross-layer tile
+                     fusion (repro.runtime.fused_exec): the backbone is
+                     partitioned into fused groups whose boundary planes
+                     never round-trip DRAM. Forward only.
 
 The legacy ``use_pallas`` flag maps to ``backend="pallas"``.
 ``layer_shapes`` feeds the traffic simulator / fusion planner benchmarks.
@@ -31,6 +35,8 @@ from repro.core.deform import (DeformableConvParams, conv2d,
                                init_deformable_conv)
 from repro.core.fusion import LayerShape
 from repro.kernels.ops import deformable_conv2d_pallas
+from repro.runtime.fused_exec import GraphConfig, run_graph
+from repro.runtime.graph import build_graph
 from repro.runtime.pipeline import PipelineConfig, dcn_pipeline
 
 # (channels, n_convs) per VGG19 stage; maxpool after each stage.
@@ -115,18 +121,28 @@ def _pool_positions(cfg: DcnNetConfig) -> set[int]:
 
 def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
                   fused: bool = True, backend: str | None = None,
-                  pipeline: PipelineConfig | None = None):
+                  pipeline: PipelineConfig | None = None,
+                  graph: GraphConfig | None = None):
     """x: (N, H, W, C). Returns logits (N, classes) for vgg19 or per-pixel
     logits (N, H', W', classes) for segnet.
 
-    backend: "xla" (default), "pallas", or "pipeline" (the tile-pipeline
-    executor, configured by ``pipeline``); overrides ``use_pallas``.
+    backend: "xla" (default), "pallas", "pipeline" (the tile-pipeline
+    executor, configured by ``pipeline``), or "graph" (the cross-layer
+    fused network executor, configured by ``graph``); overrides
+    ``use_pallas``.
     """
     if backend is None:
         backend = "pallas" if use_pallas else "xla"
-    if backend not in ("xla", "pallas", "pipeline"):
+    if backend not in ("xla", "pallas", "pipeline", "graph"):
         raise ValueError(f"unknown backend: {backend!r}")
     decoder = cfg.name == "segnet"
+
+    if backend == "graph":
+        net_graph = build_graph(cfg)
+        x = run_graph(params["convs"], net_graph, x, config=graph,
+                      max_displacement=cfg.max_displacement)
+        return _apply_head(params, cfg, x, decoder)
+
     plan = cfg.stage_plan(decoder)
     pools = _pool_positions(cfg)
     n_enc = sum(n for _, n in _VGG19_STAGES)
@@ -157,6 +173,10 @@ def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
             n, h, w, c = x.shape  # unpool by nearest-neighbour upsample
             x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
 
+    return _apply_head(params, cfg, x, decoder)
+
+
+def _apply_head(params, cfg: DcnNetConfig, x, decoder: bool):
     if not decoder:
         x = x.mean(axis=(1, 2))
         return x @ params["fc"]["w"] + params["fc"]["b"]

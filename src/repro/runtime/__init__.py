@@ -1,7 +1,6 @@
-"""Tile-pipeline runtime — the paper's end-to-end execution path.
+"""Tile-pipeline + network-graph runtime — the paper's execution paths.
 
-Connects the previously independent components into one runnable
-accelerator model, per batch element and layer:
+Per-layer pipeline (PR 1), per batch element and layer:
 
   stage 1   offset conv -> sampling coordinates      (core.deform)
   TDT       coords -> tile dependency table          (core.tiles)
@@ -13,19 +12,54 @@ accelerator model, per batch element and layer:
             schedule entry, scattered back into the
             (N, H, W, C_out) output                  (kernels.dcn_fused)
 
-The executor also emits a ``PipelineTrace`` whose packed-tile byte counts
-can be compared against the DRAM-traffic simulator's predictions
-(benchmarks/bench_scheduling.py, bench_fusion.py).
+Network-graph executor (§IV-D network-wide): a graph IR over the model
+backbone (runtime.graph) is partitioned into cross-layer fused groups;
+each group runs ONE Algorithm-1 schedule over a composite TDT chained
+through its layers, with intermediate tiles confined to a bounded
+on-chip tile buffer (runtime.fused_exec). Host-side schedules are
+memoized in an LRU keyed on quantized coordinates (runtime.cache).
+
+Executors emit traces (runtime.trace) whose byte counts are cross-checked
+against the DRAM-traffic simulator in benchmarks/bench_scheduling.py,
+bench_fusion.py and bench_graph.py.
 """
 
+from repro.runtime.cache import ScheduleCache, default_schedule_cache
+from repro.runtime.fused_exec import (
+    GraphConfig,
+    TileBuffer,
+    run_graph,
+    run_graph_dense,
+)
+from repro.runtime.graph import (
+    ConvNode,
+    DeformNode,
+    FusedGroup,
+    NetGraph,
+    PoolNode,
+    UpsampleNode,
+    build_graph,
+    partition_graph,
+)
 from repro.runtime.packing import (
     NeighbourTables,
     build_neighbour_tables,
     pack_output_tile,
     plane_to_tiles,
 )
-from repro.runtime.pipeline import PipelineConfig, dcn_pipeline
-from repro.runtime.trace import ImageTrace, PipelineTrace, TileRecord
+from repro.runtime.pipeline import (
+    PipelineConfig,
+    dcn_pipeline,
+    resolve_interpret,
+)
+from repro.runtime.trace import (
+    GroupTrace,
+    ImageTrace,
+    LayerBufferStats,
+    NetworkTrace,
+    PipelineTrace,
+    TileRecord,
+)
 
 __all__ = [
     "NeighbourTables",
@@ -34,7 +68,25 @@ __all__ = [
     "plane_to_tiles",
     "PipelineConfig",
     "dcn_pipeline",
+    "resolve_interpret",
+    "ScheduleCache",
+    "default_schedule_cache",
+    "GraphConfig",
+    "TileBuffer",
+    "run_graph",
+    "run_graph_dense",
+    "ConvNode",
+    "DeformNode",
+    "FusedGroup",
+    "NetGraph",
+    "PoolNode",
+    "UpsampleNode",
+    "build_graph",
+    "partition_graph",
+    "GroupTrace",
     "ImageTrace",
+    "LayerBufferStats",
+    "NetworkTrace",
     "PipelineTrace",
     "TileRecord",
 ]

@@ -1,0 +1,432 @@
+"""Cross-layer fused network executor (paper §IV-D taken network-wide).
+
+Executes a :class:`~repro.runtime.graph.NetGraph` so that inside each
+:class:`~repro.runtime.graph.FusedGroup` the boundary feature planes
+between layers NEVER materialize in DRAM:
+
+  prepass   per group, run stage-1 offset convs densely (the paper's
+            pre-scheduler runs ahead of the PE array) and build one TDT
+            per layer — measured ``tdt_from_coords`` for DCN layers,
+            analytic ``tdt_standard_conv`` halos for standard convs;
+  schedule  chain the per-layer TDTs into one composite table
+            (``compose_tdt``) and run ONE Algorithm-1 schedule per group
+            over the *group-input* tiles;
+  execute   walk the schedule; each group-output tile pulls its producer
+            tiles recursively. Intermediate tiles live in a bounded
+            per-layer :class:`TileBuffer` (FIFO eviction, recompute on
+            miss — eviction costs FLOPs, never DRAM), conv tiles run as
+            halo-windowed XLA convs, DCN tiles as the packed fused Pallas
+            kernel (``kernels.dcn_fused``).
+
+Pool/upsample segments between groups execute densely; their plane
+traffic is counted as boundary bytes. The resulting
+:class:`~repro.runtime.trace.NetworkTrace` must agree exactly with
+``core.simulator.simulate_network`` — benchmarks/bench_graph.py asserts
+the cross-check, tests/test_graph.py the numerics vs the XLA reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deform import conv2d, deformable_conv2d, offsets_to_coords
+from repro.core.scheduler import schedule_tiles, sequential_schedule
+from repro.core.tiles import (TileGrid, compose_tdt_chain, tdt_from_coords,
+                              tdt_standard_conv)
+from repro.kernels.dcn_fused import dcn_fused_tile
+from repro.kernels.ops import round_up
+from repro.runtime.cache import (ScheduleCache, chain_digest, conv_digest,
+                                 coords_digest, default_schedule_cache)
+from repro.runtime.graph import (DeformNode, FusedGroup, NetGraph, PoolNode,
+                                 Segment, UpsampleNode, boundary_bytes,
+                                 group_weight_bytes, partition_graph)
+from repro.runtime.packing import (build_neighbour_tables, pack_output_tile,
+                                   plane_to_tiles, tiles_to_plane)
+from repro.runtime.pipeline import resolve_interpret
+from repro.runtime.trace import (GroupTrace, LayerBufferStats, NetworkTrace,
+                                 TileRecord)
+
+ONCHIP_BUDGET_BYTES = (128 + 256) * 1024   # paper Table I: input + output buf
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    """Network-graph executor knobs."""
+
+    tile: int | tuple[int, int] = 8       # tile side(s), shared per group
+    buffer_tiles: int | None = None       # M for the composite schedule
+    # Intermediate tile-buffer capacity per layer plane. None = derive from
+    # onchip_budget_bytes (budget split across the group's layers); an int
+    # pins it, and undersizing only costs recomputes, never correctness.
+    inter_buffer_tiles: int | None = None
+    schedule: str = "alg1"                # "alg1" | "sequential"
+    block_p: int = 128                    # kernel pixel-block size
+    interpret: bool | None = None         # None = auto (CPU -> interpret)
+    onchip_budget_bytes: int = ONCHIP_BUDGET_BYTES  # drives group planning
+    use_schedule_cache: bool = True
+
+    @property
+    def tile_hw(self) -> tuple[int, int]:
+        t = self.tile
+        th, tw = (t, t) if isinstance(t, int) else (int(t[0]), int(t[1]))
+        if th < 1 or tw < 1:
+            raise ValueError(f"tile sides must be >= 1, got {(th, tw)}")
+        return th, tw
+
+
+class TileBuffer:
+    """Bounded on-chip store for one intermediate plane's output tiles.
+
+    FIFO eviction like the paper's input buffer; a miss on a previously
+    produced tile means recompute (fusion forbids the DRAM round trip).
+    """
+
+    def __init__(self, capacity_tiles: int):
+        if capacity_tiles < 1:
+            raise ValueError("tile buffer capacity must be >= 1 tile")
+        self.capacity = int(capacity_tiles)
+        self._tiles: dict[int, Any] = {}
+        self._queue: list[int] = []
+        self._ever: set[int] = set()
+        self.computes = 0
+        self.recomputes = 0
+        self.resident_bytes = 0
+        self.max_resident_bytes = 0
+
+    def get(self, tile: int):
+        return self._tiles.get(tile)
+
+    def put(self, tile: int, value, nbytes: int) -> None:
+        self.computes += 1
+        if tile in self._ever:
+            self.recomputes += 1
+        self._ever.add(tile)
+        if tile not in self._tiles:
+            self._queue.append(tile)
+        self._tiles[tile] = value
+        self.resident_bytes += nbytes
+        while len(self._queue) > self.capacity:
+            evicted = self._queue.pop(0)
+            self._tiles.pop(evicted, None)
+            self.resident_bytes -= nbytes  # uniform tile size per plane
+        self.max_resident_bytes = max(self.max_resident_bytes,
+                                      self.resident_bytes)
+
+
+def apply_layer_dense(plane: jax.Array, node, p,
+                      max_displacement: float | None = None) -> jax.Array:
+    """XLA reference for one layer node on a (H, W, C) plane."""
+    if isinstance(node, DeformNode):
+        y = deformable_conv2d(plane[None], p, node.kernel_size, node.variant,
+                              max_displacement)[0]
+    else:
+        y = conv2d(plane[None], p["w"], p["b"])[0]
+    return jax.nn.relu(y) if node.relu else y
+
+
+def apply_boundary_dense(plane: jax.Array, node: Segment) -> jax.Array:
+    """Dense pool/upsample between groups (resolution boundary)."""
+    if isinstance(node, PoolNode):
+        k = node.window
+        return jax.lax.reduce_window(plane[None], -jnp.inf, jax.lax.max,
+                                     (1, k, k, 1), (1, k, k, 1), "VALID")[0]
+    f = node.factor
+    return jnp.repeat(jnp.repeat(plane, f, axis=0), f, axis=1)
+
+
+def run_graph_dense(convs: list, graph: NetGraph, x: jax.Array,
+                    max_displacement: float | None = None) -> jax.Array:
+    """Dense XLA execution of the whole graph — the numerics oracle."""
+    outs = []
+    for i in range(x.shape[0]):
+        plane = x[i]
+        for node in graph.nodes:
+            if isinstance(node, (PoolNode, UpsampleNode)):
+                plane = apply_boundary_dense(plane, node)
+            else:
+                plane = apply_layer_dense(plane, node, convs[node.param_idx],
+                                          max_displacement)
+        outs.append(plane)
+    return jnp.stack(outs)
+
+
+def _inter_capacity(cfg: GraphConfig, group: FusedGroup, node,
+                    tp: int, dtype_bytes: int) -> int:
+    """Tile-buffer capacity for one layer plane: an even split of the
+    on-chip budget across the group's layers, in that plane's tile size."""
+    if cfg.inter_buffer_tiles is not None:
+        return cfg.inter_buffer_tiles
+    per_layer = cfg.onchip_budget_bytes // max(1, group.n_layers)
+    return max(1, per_layer // (tp * node.c_out * dtype_bytes))
+
+
+def _tile_valid_mask(grid: TileGrid, tile: int) -> np.ndarray:
+    """(tp, 1) float mask: 1 inside the real H x W plane, 0 on padding."""
+    tr, tc = divmod(tile, grid.cols)
+    rr = np.arange(tr * grid.th, (tr + 1) * grid.th)
+    cc = np.arange(tc * grid.tw, (tc + 1) * grid.tw)
+    valid = (rr[:, None] < grid.h) & (cc[None, :] < grid.w)
+    return valid.reshape(-1, 1).astype(np.float32)
+
+
+def _assemble_halo(dep_arrays: list, deps: np.ndarray, grid: TileGrid,
+                   out_tile: int, r: int, c: int) -> jax.Array:
+    """Paste dependent tiles into the (th+2r, tw+2r, C) halo window of
+    ``out_tile``. Positions no tile covers stay zero — identical to the
+    SAME-conv zero padding because produced tiles are masked beyond the
+    real plane."""
+    th, tw = grid.th, grid.tw
+    tr, tc = divmod(out_tile, grid.cols)
+    r_lo, c_lo = tr * th - r, tc * tw - r
+    win = jnp.zeros((th + 2 * r, tw + 2 * r, c), dep_arrays[0].dtype)
+    for d, arr in zip(deps, dep_arrays):
+        dr, dc = divmod(int(d), grid.cols)
+        a0, a1 = max(dr * th, r_lo), min((dr + 1) * th, r_lo + th + 2 * r)
+        b0, b1 = max(dc * tw, c_lo), min((dc + 1) * tw, c_lo + tw + 2 * r)
+        if a1 <= a0 or b1 <= b0:
+            continue
+        patch = arr.reshape(th, tw, c)[a0 - dr * th:a1 - dr * th,
+                                       b0 - dc * tw:b1 - dc * tw]
+        win = win.at[a0 - r_lo:a1 - r_lo, b0 - c_lo:b1 - c_lo].set(patch)
+    return win
+
+
+def _group_schedule_artifacts(
+    x_g: jax.Array,
+    group: FusedGroup,
+    convs: list,
+    grid: TileGrid,
+    m: int,
+    cfg: GraphConfig,
+    max_displacement: float | None,
+    cache: ScheduleCache | None,
+):
+    """Prepass: per-layer TDTs + neighbour tables + composite schedule.
+
+    Stage-1 offset convs run densely (the hardware pre-scheduler's role);
+    only layers with a downstream DeformNode need their dense plane. The
+    (TDTs, schedule) pair is cached under the quantized-coords chain
+    digest when a cache is given.
+    """
+    needs_plane = [any(isinstance(n, DeformNode) for n in group.nodes[j + 1:])
+                   for j in range(group.n_layers)]
+    plane = x_g
+    nbs: list = []
+    digests: list[str] = []
+    dcn_coords: list = []
+    for j, node in enumerate(group.nodes):
+        p = convs[node.param_idx]
+        if isinstance(node, DeformNode):
+            offsets = conv2d(plane[None], p.w_off, p.b_off)
+            coords = offsets_to_coords(offsets.astype(jnp.float32),
+                                       node.kernel_size, node.variant,
+                                       max_displacement)[0]
+            nbs.append(build_neighbour_tables(coords, grid))
+            digests.append(coords_digest(coords, grid))
+            dcn_coords.append(coords)
+        else:
+            nbs.append(None)
+            digests.append(conv_digest(node.kernel_size, grid))
+            dcn_coords.append(None)
+        if needs_plane[j]:
+            plane = apply_layer_dense(plane, node, p, max_displacement)
+
+    def build():
+        b_layers = []
+        for node, coords in zip(group.nodes, dcn_coords):
+            if coords is None:
+                b_layers.append(tdt_standard_conv(grid, grid,
+                                                  node.kernel_size))
+            else:
+                b_layers.append(np.asarray(tdt_from_coords(coords, grid,
+                                                           grid)))
+        comp = compose_tdt_chain(b_layers)
+        if cfg.schedule == "alg1":
+            sched = schedule_tiles(comp, m)
+        elif cfg.schedule == "sequential":
+            sched = sequential_schedule(comp)
+        else:
+            raise ValueError(f"unknown schedule: {cfg.schedule!r}")
+        return b_layers, sched
+
+    if cache is None:
+        b_layers, sched = build()
+        return b_layers, nbs, sched, None
+    key = (chain_digest(digests, grid), m, cfg.schedule)
+    (b_layers, sched), hit = cache.get_or_build(key, build)
+    return b_layers, nbs, sched, hit
+
+
+def _run_group(
+    x_g: jax.Array,
+    group: FusedGroup,
+    convs: list,
+    cfg: GraphConfig,
+    interpret: bool,
+    max_displacement: float | None,
+    cache: ScheduleCache | None,
+) -> tuple[jax.Array, GroupTrace]:
+    h, w, c_in = x_g.shape
+    th, tw = cfg.tile_hw
+    grid = TileGrid(h, w, min(th, h), min(tw, w))
+    tp = grid.th * grid.tw
+    m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
+    dtype_bytes = x_g.dtype.itemsize
+
+    b_layers, nbs, sched, cache_hit = _group_schedule_artifacts(
+        x_g, group, convs, grid, m, cfg, max_displacement, cache)
+
+    # Per-DCN-layer packing geometry: uniform packed-buffer sizes so each
+    # layer compiles its fused kernel once per group.
+    bp = min(cfg.block_p, tp)
+    p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
+    k_pad = [1 << (max(1, int(b.sum(axis=1).max())) - 1).bit_length()
+             for b in b_layers]
+
+    x_tiles = plane_to_tiles(x_g, grid)
+    buffers = [TileBuffer(_inter_capacity(cfg, group, n, tp, dtype_bytes))
+               for n in group.nodes]
+    masks = [jnp.asarray(_tile_valid_mask(grid, t), x_g.dtype)
+             for t in range(grid.num_tiles)]
+
+    def produce(j: int, t: int) -> jax.Array:
+        if j < 0:
+            return x_tiles[t]
+        cached = buffers[j].get(t)
+        if cached is not None:
+            return cached
+        node = group.nodes[j]
+        deps = np.flatnonzero(b_layers[j][t])
+        dep_arrays = [produce(j - 1, int(d)) for d in deps]
+        p = convs[node.param_idx]
+        if isinstance(node, DeformNode):
+            idx, coeff = pack_output_tile(nbs[j], grid, t, deps.tolist(),
+                                          p_pad)
+            x_packed = jnp.stack(dep_arrays)                  # (k, tp, C)
+            if len(deps) < k_pad[j]:
+                x_packed = jnp.pad(
+                    x_packed, ((0, k_pad[j] - len(deps)), (0, 0), (0, 0)))
+            kk = node.kernel_size ** 2
+            w2 = p.w.reshape(kk, node.c_in, node.c_out)
+            y = dcn_fused_tile(
+                x_packed.reshape(k_pad[j] * tp, node.c_in),
+                jnp.asarray(idx), jnp.asarray(coeff), w2, p.b,
+                kernel_size=node.kernel_size, block_p=cfg.block_p,
+                interpret=interpret)[:tp]
+        else:
+            r = (node.kernel_size - 1) // 2
+            win = _assemble_halo(dep_arrays, deps, grid, t, r, node.c_in)
+            y = conv2d(win[None], p["w"], p["b"], padding="VALID")[0]
+            y = y.reshape(tp, node.c_out)
+        if node.relu:
+            y = jax.nn.relu(y)
+        y = y * masks[t]    # zero padded-plane pixels: halo reads see zeros
+        buffers[j].put(t, y, tp * node.c_out * dtype_bytes)
+        return y
+
+    tile_bytes = tp * c_in * dtype_bytes
+    trace = GroupTrace(
+        grid=grid, tile_bytes=tile_bytes, buffer_tiles=m,
+        schedule=cfg.schedule, schedule_cache_hit=cache_hit,
+        dtype_bytes=dtype_bytes, layer_channels=group.layer_channels,
+        output_bytes=h * w * group.c_out * dtype_bytes,
+        weight_bytes=group_weight_bytes(group, dtype_bytes),
+        b_layers=list(b_layers))
+
+    last = group.n_layers - 1
+    y_tiles: list = [None] * grid.num_tiles
+    for out_tile, loads in zip(sched.oid, sched.iid):
+        y_tiles[out_tile] = produce(last, out_tile)
+        trace.records.append(TileRecord(
+            out_tile=out_tile,
+            dep_tiles=tuple(loads),
+            loaded_bytes=len(loads) * tile_bytes,
+            buffer_bytes=len(loads) * tile_bytes))
+
+    trace.layer_stats = [
+        LayerBufferStats(kind=n.kind, tiles_computed=b.computes,
+                         recomputes=b.recomputes,
+                         max_resident_bytes=b.max_resident_bytes)
+        for n, b in zip(group.nodes, buffers)]
+
+    zero = jnp.zeros((tp, group.c_out), x_g.dtype)
+    y = tiles_to_plane(jnp.stack([t if t is not None else zero
+                                  for t in y_tiles]), grid, h, w)
+    return y, trace
+
+
+def run_graph(
+    convs: list,
+    graph: NetGraph,
+    x: jax.Array,
+    *,
+    config: GraphConfig | None = None,
+    max_displacement: float | None = None,
+    return_trace: bool = False,
+):
+    """Execute a backbone graph over a batch: (N,H,W,C) -> (N,H',W',C').
+
+    ``convs`` is the per-node parameter list (``params["convs"]`` of the
+    DCN models): ``DeformableConvParams`` for DeformNodes, ``{"w", "b"}``
+    dicts for ConvNodes. Numerically matches :func:`run_graph_dense` (the
+    XLA reference) to float tolerance; with ``return_trace`` additionally
+    returns the :class:`NetworkTrace` of the executed DRAM traffic.
+    """
+    if isinstance(x, jax.core.Tracer):
+        raise ValueError(
+            "run_graph is a host-driven, forward-only executor: the "
+            "cross-layer schedule is data-dependent, so it cannot run "
+            "under jit/grad/vmap. Use backend='xla' for those paths.")
+    cfg = config or GraphConfig()
+    interpret = resolve_interpret(cfg.interpret)
+    cache = default_schedule_cache() if cfg.use_schedule_cache else None
+    segments = partition_graph(graph, cfg.onchip_budget_bytes,
+                               dtype_bytes=x.dtype.itemsize)
+
+    trace = NetworkTrace()
+    n = x.shape[0]
+    if n == 0:
+        h, w, c = graph.out_shape
+        y = jnp.zeros((0, h, w, c), x.dtype)
+        return (y, trace) if return_trace else y
+    outs = []
+    for i in range(n):
+        plane = x[i]
+        g = 0
+        for seg in segments:
+            if isinstance(seg, (PoolNode, UpsampleNode)):
+                plane = apply_boundary_dense(plane, seg)
+                trace.boundary_bytes += boundary_bytes(seg,
+                                                       x.dtype.itemsize)
+            else:
+                plane, gt = _run_group(plane, seg, convs, cfg, interpret,
+                                       max_displacement, cache)
+                gt.image, gt.group = i, g
+                g += 1
+                trace.groups.append(gt)
+        outs.append(plane)
+    y = jnp.stack(outs)
+    return (y, trace) if return_trace else y
+
+
+def network_sim_specs(trace: NetworkTrace) -> list[dict]:
+    """Rebuild ``core.simulator.simulate_network`` group specs from an
+    executed trace — byte-identical TDT inputs, so the fused prediction
+    must equal the executed FIFO replay exactly."""
+    specs = []
+    for gt in trace.groups:
+        specs.append(dict(
+            b_layers=gt.b_layers,
+            grid=gt.grid,
+            layer_channels=gt.layer_channels,
+            weight_bytes=gt.weight_bytes,
+            buffer_tiles=gt.buffer_tiles,
+            dtype_bytes=gt.dtype_bytes,
+            schedule=gt.schedule,
+        ))
+    return specs

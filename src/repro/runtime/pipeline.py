@@ -29,9 +29,18 @@ from repro.core.scheduler import schedule_tiles, sequential_schedule
 from repro.core.tiles import TileGrid, tdt_from_coords
 from repro.kernels.dcn_fused import dcn_fused_tile
 from repro.kernels.ops import round_up
+from repro.runtime.cache import coords_digest, default_schedule_cache
 from repro.runtime.packing import (build_neighbour_tables, pack_output_tile,
                                    plane_to_tiles, tiles_to_plane)
 from repro.runtime.trace import ImageTrace, PipelineTrace, TileRecord
+
+
+def resolve_interpret(flag: bool | None) -> bool:
+    """None = auto-detect: Pallas interpret mode only off-accelerator, so
+    GPU/TPU runs compile the kernels without a config change."""
+    if flag is None:
+        return jax.default_backend() == "cpu"
+    return bool(flag)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,7 +51,8 @@ class PipelineConfig:
     buffer_tiles: int | None = None      # M for Algorithm 1; None = all
     schedule: str = "alg1"               # "alg1" | "sequential"
     block_p: int = 128                   # kernel pixel-block size
-    interpret: bool = True               # Pallas interpret (CPU) fallback
+    interpret: bool | None = None        # Pallas interpret; None = auto
+    use_schedule_cache: bool = True      # LRU-cache TDT+Algorithm-1 builds
 
     @property
     def tile_hw(self) -> tuple[int, int]:
@@ -65,15 +75,22 @@ def _pipeline_single(
     th, tw = cfg.tile_hw
     grid = TileGrid(h, w, min(th, h), min(tw, w))
     tp = grid.th * grid.tw
-
-    B = np.asarray(tdt_from_coords(coords_i, grid, grid))
     m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
-    if cfg.schedule == "alg1":
-        sched = schedule_tiles(B, m)
-    elif cfg.schedule == "sequential":
-        sched = sequential_schedule(B)
-    else:
+
+    def build_schedule():
+        B = np.asarray(tdt_from_coords(coords_i, grid, grid))
+        if cfg.schedule == "alg1":
+            return schedule_tiles(B, m)
+        if cfg.schedule == "sequential":
+            return sequential_schedule(B)
         raise ValueError(f"unknown schedule: {cfg.schedule!r}")
+
+    if cfg.use_schedule_cache:
+        key = (coords_digest(coords_i, grid), m, cfg.schedule)
+        sched, cache_hit = default_schedule_cache().get_or_build(
+            key, build_schedule)
+    else:
+        sched, cache_hit = build_schedule(), None
 
     x_tiles = plane_to_tiles(x_i, grid)               # (T, tp, C)
     nb = build_neighbour_tables(coords_i, grid)
@@ -87,7 +104,7 @@ def _pipeline_single(
 
     tile_bytes = tp * c * x_i.dtype.itemsize
     trace = ImageTrace(grid=grid, tile_bytes=tile_bytes, buffer_tiles=m,
-                       schedule=cfg.schedule)
+                       schedule=cfg.schedule, schedule_cache_hit=cache_hit)
 
     c_out = w2.shape[-1]
     y_tiles = [None] * grid.num_tiles
@@ -101,7 +118,7 @@ def _pipeline_single(
             x_packed.reshape(k_pad * tp, c),
             jnp.asarray(idx), jnp.asarray(coeff), w2, b,
             kernel_size=kernel_size, block_p=cfg.block_p,
-            interpret=cfg.interpret)
+            interpret=resolve_interpret(cfg.interpret))
         y_tiles[out_tile] = y_t[:tp]
         trace.records.append(TileRecord(
             out_tile=out_tile,
@@ -126,7 +143,7 @@ def dcn_pipeline(
     buffer_tiles: int | None = None,
     schedule: str = "alg1",
     block_p: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     return_trace: bool = False,
     config: PipelineConfig | None = None,
 ):

@@ -1,16 +1,20 @@
-"""Execution traces of the tile-pipeline executor.
+"""Execution traces of the tile-pipeline and network-graph executors.
 
 The trace is the executor-side counterpart of the DRAM-traffic simulator
 (``repro.core.simulator``): where the simulator *predicts* tile loads from
 the TDT and a FIFO buffer model, the trace records what the executor
 *actually packed and dispatched*. Replaying the recorded load sequence
 through the same ``FifoBuffer`` must reproduce the simulator's scheduled
-tile-load count exactly — benchmarks/bench_scheduling.py asserts this.
+tile-load count exactly — benchmarks/bench_scheduling.py asserts this for
+the per-layer pipeline, benchmarks/bench_graph.py for the cross-layer
+fused groups (``GroupTrace`` / ``NetworkTrace``).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.core.scheduler import FifoBuffer
 from repro.core.tiles import TileGrid
@@ -35,6 +39,8 @@ class ImageTrace:
     buffer_tiles: int            # M used for scheduling
     schedule: str                # "alg1" | "sequential"
     records: list[TileRecord] = field(default_factory=list)
+    # None = schedule cache disabled for this image; True/False = hit/miss.
+    schedule_cache_hit: bool | None = None
 
     @property
     def packed_tile_loads(self) -> int:
@@ -77,5 +83,107 @@ class PipelineTrace:
     def packed_tile_loads(self) -> int:
         return sum(im.packed_tile_loads for im in self.images)
 
+    @property
+    def schedule_cache_hits(self) -> int:
+        return sum(im.schedule_cache_hit is True for im in self.images)
+
+    @property
+    def schedule_cache_misses(self) -> int:
+        return sum(im.schedule_cache_hit is False for im in self.images)
+
     def fifo_loads(self, buffer_tiles: int | None = None) -> int:
         return sum(im.fifo_replay(buffer_tiles).loads for im in self.images)
+
+
+# ---------------------------------------------------------------------------
+# Network-graph executor traces (cross-layer fused groups)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LayerBufferStats:
+    """On-chip accounting of one layer's output-tile buffer inside a fused
+    group: intermediates never touch DRAM, so the only costs are the
+    bounded resident footprint and recomputes after eviction."""
+
+    kind: str                    # "conv" | "deform"
+    tiles_computed: int = 0      # kernel dispatches (first computes + recomputes)
+    recomputes: int = 0          # tiles evicted then produced again
+    max_resident_bytes: int = 0  # tile-buffer high-water mark
+
+
+@dataclass
+class GroupTrace(ImageTrace):
+    """One fused group of one batch element as executed.
+
+    ``records`` holds the group-level schedule: per composite-schedule
+    entry, the *group-input* tiles in load order — ``fifo_replay`` of that
+    sequence must equal the network simulator's fused prediction exactly.
+    ``b_layers`` keeps the per-layer TDTs the schedule was built from so
+    the simulator cross-check consumes byte-identical inputs.
+    """
+
+    image: int = 0
+    group: int = 0
+    dtype_bytes: int = 4
+    layer_channels: list[tuple[int, int]] = field(default_factory=list)
+    output_bytes: int = 0        # group output plane write
+    weight_bytes: int = 0
+    layer_stats: list[LayerBufferStats] = field(default_factory=list)
+    b_layers: list[np.ndarray] = field(default_factory=list)
+
+    @property
+    def input_load_bytes(self) -> int:
+        return self.fifo_replay().loads * self.tile_bytes
+
+    @property
+    def total_dram_bytes(self) -> int:
+        # Interior planes contribute nothing: that is the fusion.
+        return self.input_load_bytes + self.output_bytes + self.weight_bytes
+
+    @property
+    def total_recomputes(self) -> int:
+        return sum(s.recomputes for s in self.layer_stats)
+
+    @property
+    def max_resident_bytes(self) -> int:
+        return max((s.max_resident_bytes for s in self.layer_stats),
+                   default=0)
+
+
+@dataclass
+class NetworkTrace:
+    """Trace of one ``run_graph`` call: all groups of all batch elements,
+    plus the dense boundary ops (pool/upsample) between groups."""
+
+    groups: list[GroupTrace] = field(default_factory=list)
+    boundary_bytes: int = 0      # pool/upsample plane read+write traffic
+
+    @property
+    def input_load_bytes(self) -> int:
+        return sum(g.input_load_bytes for g in self.groups)
+
+    @property
+    def output_write_bytes(self) -> int:
+        return sum(g.output_bytes for g in self.groups)
+
+    @property
+    def weight_read_bytes(self) -> int:
+        return sum(g.weight_bytes for g in self.groups)
+
+    @property
+    def total_dram_bytes(self) -> int:
+        return (self.input_load_bytes + self.output_write_bytes
+                + self.weight_read_bytes + self.boundary_bytes)
+
+    @property
+    def schedule_cache_hits(self) -> int:
+        return sum(g.schedule_cache_hit is True for g in self.groups)
+
+    @property
+    def schedule_cache_misses(self) -> int:
+        return sum(g.schedule_cache_hit is False for g in self.groups)
+
+    @property
+    def total_recomputes(self) -> int:
+        return sum(g.total_recomputes for g in self.groups)

@@ -1,0 +1,265 @@
+"""Oracle + accounting tests for the network-graph executor.
+
+The cross-layer fused executor (repro.runtime.fused_exec) must be
+numerically indistinguishable from the dense XLA reference on multi-layer
+networks — including a conv -> DCN -> conv fused group, a pool boundary
+and shapes that do not divide by the tile size — and its executed trace
+must agree EXACTLY with the network-level DRAM-traffic simulator, with
+the fused execution strictly cheaper than the per-layer (PR 1) execution
+of the same network.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deform import init_deformable_conv, randomize_offset_conv
+from repro.core.fusion import FusionMode, LayerShape, plan_fused_groups
+from repro.core.simulator import simulate_network
+from repro.core.tiles import TileGrid, compose_tdt, tdt_standard_conv
+from repro.models.dcn_models import DcnNetConfig, dcn_net_apply, init_dcn_net
+from repro.runtime import (ConvNode, DeformNode, FusedGroup, GraphConfig,
+                           NetGraph, PoolNode, UpsampleNode, build_graph,
+                           partition_graph, run_graph, run_graph_dense)
+from repro.runtime.fused_exec import network_sim_specs
+
+
+def _conv_p(key, c_in, c_out, scale=0.2):
+    return {"w": jax.random.normal(key, (3, 3, c_in, c_out)) * scale,
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (c_out,)) * 0.1}
+
+
+def _deform_p(key, c_in, c_out, offset_scale=0.5):
+    p = init_deformable_conv(key, c_in, c_out, 3, "dcn2")
+    return randomize_offset_conv(p, jax.random.fold_in(key, 1), offset_scale)
+
+
+def _acceptance_case(h=13, w=13, seed=0):
+    """conv -> DCN -> conv (one fused group), pool boundary, trailing conv;
+    13x13 does not divide by the tile size."""
+    key = jax.random.PRNGKey(seed)
+    convs = [
+        _conv_p(jax.random.fold_in(key, 0), 3, 6),
+        _deform_p(jax.random.fold_in(key, 1), 6, 6),
+        _conv_p(jax.random.fold_in(key, 2), 6, 8),
+        _conv_p(jax.random.fold_in(key, 3), 8, 8),
+    ]
+    nodes = (ConvNode(0, 3, 6, h, w), DeformNode(1, 6, 6, h, w),
+             ConvNode(2, 6, 8, h, w), PoolNode(h, w, 8),
+             ConvNode(3, 8, 8, (h - 2) // 2 + 1, (w - 2) // 2 + 1))
+    graph = NetGraph(nodes, h, w, 3)
+    x = jax.random.normal(jax.random.fold_in(key, 4), (2, h, w, 3))
+    return convs, graph, x
+
+
+class TestGraphOracle:
+    def test_acceptance_network_matches_xla(self):
+        """ISSUE 2 acceptance: >=3-layer network with conv -> DCN -> conv,
+        a pool boundary and a non-divisible shape, within 1e-4."""
+        convs, graph, x = _acceptance_case()
+        y_ref = run_graph_dense(convs, graph, x)
+        y, trace = run_graph(convs, graph, x, config=GraphConfig(tile=4),
+                             return_trace=True)
+        assert y.shape == y_ref.shape
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        # conv -> DCN -> conv really fused into ONE group
+        first = [g for g in trace.groups if g.image == 0][0]
+        assert [s.kind for s in first.layer_stats] == ["conv", "deform",
+                                                       "conv"]
+
+    @pytest.mark.parametrize("tile", [2, 4, (3, 5)])
+    def test_tile_size_does_not_change_numerics(self, tile):
+        convs, graph, x = _acceptance_case(seed=1)
+        y_ref = run_graph_dense(convs, graph, x)
+        y = run_graph(convs, graph, x, config=GraphConfig(tile=tile))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bounded_tile_buffer_recomputes_not_wrong(self):
+        """A 1-tile intermediate buffer forces evict+recompute; numerics
+        must not change and recomputes must actually happen."""
+        convs, graph, x = _acceptance_case(seed=2)
+        y_ref = run_graph_dense(convs, graph, x)
+        y, trace = run_graph(
+            convs, graph, x,
+            config=GraphConfig(tile=4, inter_buffer_tiles=1),
+            return_trace=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        assert trace.total_recomputes > 0
+
+    def test_upsample_boundary(self):
+        key = jax.random.PRNGKey(5)
+        h = w = 6
+        convs = [_conv_p(jax.random.fold_in(key, 0), 3, 4),
+                 _conv_p(jax.random.fold_in(key, 1), 4, 4)]
+        nodes = (ConvNode(0, 3, 4, h, w), UpsampleNode(h, w, 4),
+                 ConvNode(1, 4, 4, 2 * h, 2 * w))
+        graph = NetGraph(nodes, h, w, 3)
+        x = jax.random.normal(jax.random.fold_in(key, 2), (1, h, w, 3))
+        y_ref = run_graph_dense(convs, graph, x)
+        y = run_graph(convs, graph, x, config=GraphConfig(tile=4))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_empty_batch(self):
+        convs, graph, _ = _acceptance_case()
+        x = jnp.zeros((0, 13, 13, 3))
+        y = run_graph(convs, graph, x, config=GraphConfig(tile=4))
+        assert y.shape == (0, 6, 6, 8)
+
+    def test_tracer_rejected(self):
+        convs, graph, x = _acceptance_case()
+        with pytest.raises(ValueError, match="host-driven"):
+            jax.jit(lambda v: run_graph(convs, graph, v))(x)
+
+
+class TestGraphAccounting:
+    def _trace(self, buffer_tiles=None, seed=0):
+        convs, graph, x = _acceptance_case(seed=seed)
+        _, trace = run_graph(
+            convs, graph, x[:1],
+            config=GraphConfig(tile=4, buffer_tiles=buffer_tiles),
+            return_trace=True)
+        return trace
+
+    @pytest.mark.parametrize("buffer_tiles", [None, 4, 2])
+    def test_executed_trace_matches_simulator_exactly(self, buffer_tiles):
+        """ISSUE 2 acceptance: network-level simulator and executed trace
+        agree exactly (loads and bytes) under the same FIFO model."""
+        trace = self._trace(buffer_tiles=buffer_tiles)
+        sim = simulate_network(network_sim_specs(trace),
+                               boundary_bytes=trace.boundary_bytes,
+                               fused=True)
+        for gt, rep in zip(trace.groups, sim.groups):
+            assert gt.fifo_replay().loads == rep.tile_loads
+            assert gt.input_load_bytes == rep.input_read_bytes
+            assert gt.output_bytes == rep.output_write_bytes
+            assert gt.weight_bytes == rep.weight_read_bytes
+        assert trace.total_dram_bytes == sim.total_dram_bytes
+
+    def test_fused_strictly_below_layerwise(self):
+        """ISSUE 2 acceptance: fused DRAM traffic strictly below the
+        per-layer (PR 1) execution of the same network."""
+        trace = self._trace()
+        specs = network_sim_specs(trace)
+        fused = simulate_network(specs, boundary_bytes=trace.boundary_bytes,
+                                 fused=True)
+        layerwise = simulate_network(specs,
+                                     boundary_bytes=trace.boundary_bytes,
+                                     fused=False)
+        assert fused.total_dram_bytes < layerwise.total_dram_bytes
+        # interior planes are exactly what the fusion removes
+        assert sum(g.intermediate_bytes for g in layerwise.groups) > 0
+        assert all(g.intermediate_bytes == 0 for g in fused.groups)
+
+    def test_schedule_covers_every_output_tile(self):
+        trace = self._trace()
+        for gt in trace.groups:
+            executed = sorted(r.out_tile for r in gt.records)
+            assert executed == list(range(gt.grid.num_tiles))
+
+    def test_group_deps_match_composite_tdt(self):
+        """Each group-schedule entry packs exactly the composite-TDT row."""
+        trace = self._trace()
+        for gt in trace.groups:
+            comp = np.asarray(gt.b_layers[-1], bool)
+            for b in gt.b_layers[-2::-1]:
+                comp = compose_tdt(comp, b)
+            for r in gt.records:
+                assert sorted(r.dep_tiles) == \
+                    np.flatnonzero(comp[r.out_tile]).tolist()
+
+
+class TestGraphIR:
+    def test_compose_tdt_matches_bruteforce(self):
+        rng = np.random.default_rng(0)
+        a = rng.random((6, 5)) < 0.4
+        b = rng.random((5, 7)) < 0.4
+        want = np.zeros((6, 7), bool)
+        for o in range(6):
+            for m in range(5):
+                if a[o, m]:
+                    want[o] |= b[m]
+        np.testing.assert_array_equal(compose_tdt(a, b), want)
+
+    def test_compose_tdt_shape_mismatch(self):
+        with pytest.raises(ValueError, match="chain"):
+            compose_tdt(np.ones((2, 3), bool), np.ones((4, 2), bool))
+
+    def test_composite_halo_grows(self):
+        """Two chained 3x3 convs must reach at least the tiles one conv
+        reaches (a 5x5 effective receptive field)."""
+        grid = TileGrid(16, 16, 4, 4)
+        b1 = tdt_standard_conv(grid, grid)
+        comp = compose_tdt(b1, b1)
+        assert (comp & ~b1).sum() >= 0
+        assert comp.sum() >= b1.sum()
+
+    def test_build_graph_mirrors_model(self):
+        cfg = DcnNetConfig(name="vgg19", n_deform=2, img_size=16,
+                           width_mult=0.125, num_classes=4)
+        graph = build_graph(cfg)
+        layer_nodes = [n for n in graph.nodes
+                       if isinstance(n, (ConvNode, DeformNode))]
+        plan = cfg.stage_plan(False)
+        assert len(layer_nodes) == len(plan)
+        assert sum(isinstance(n, DeformNode) for n in layer_nodes) == 2
+        # pools appear while the plane is >= 2 pixels on a side
+        assert any(isinstance(n, PoolNode) for n in graph.nodes)
+
+    def test_partition_pool_breaks_groups(self):
+        convs, graph, _ = _acceptance_case()
+        segments = partition_graph(graph, (128 + 256) * 1024)
+        kinds = [type(s).__name__ for s in segments]
+        assert kinds == ["FusedGroup", "PoolNode", "FusedGroup"]
+        assert segments[0].n_layers == 3
+
+    def test_partition_staged_is_singleton(self):
+        """A zero on-chip budget forces STAGED: every layer its own group."""
+        convs, graph, _ = _acceptance_case()
+        segments = partition_graph(graph, onchip_budget_bytes=1)
+        groups = [s for s in segments if isinstance(s, FusedGroup)]
+        assert all(g.n_layers == 1 for g in groups)
+        assert all(p.mode is FusionMode.STAGED
+                   for g in groups for p in g.plan.plans)
+
+    def test_plan_fused_groups_saved_bytes(self):
+        shapes = [LayerShape(8, 8, 4, 4, dtype_bytes=1)] * 3
+        groups = plan_fused_groups(shapes, (128 + 256) * 1024)
+        assert len(groups) == 1
+        # two interior boundary planes, write + read each
+        assert groups[0].dram_bytes_saved == 2 * 2 * 8 * 8 * 4
+
+    def test_netgraph_validates_chain(self):
+        with pytest.raises(ValueError, match="accept"):
+            NetGraph((ConvNode(0, 3, 4, 8, 8), ConvNode(1, 5, 4, 8, 8)),
+                     8, 8, 3)
+
+
+class TestGraphModelBackend:
+    def test_graph_backend_matches_xla(self):
+        cfg = DcnNetConfig(name="vgg19", n_deform=2, img_size=16,
+                           width_mult=0.125, num_classes=4)
+        p = init_dcn_net(jax.random.PRNGKey(2), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 16, 3))
+        y_xla = dcn_net_apply(p, cfg, x, backend="xla", fused=False)
+        y_graph = dcn_net_apply(p, cfg, x, backend="graph",
+                                graph=GraphConfig(tile=4))
+        np.testing.assert_allclose(np.asarray(y_graph), np.asarray(y_xla),
+                                   rtol=5e-3, atol=5e-3)
+
+    @pytest.mark.slow
+    def test_graph_backend_segnet(self):
+        cfg = DcnNetConfig(name="segnet", n_deform=2, img_size=8,
+                           width_mult=0.125, num_classes=3)
+        p = init_dcn_net(jax.random.PRNGKey(4), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 8, 3))
+        y_xla = dcn_net_apply(p, cfg, x, backend="xla", fused=False)
+        y_graph = dcn_net_apply(p, cfg, x, backend="graph",
+                                graph=GraphConfig(tile=4))
+        np.testing.assert_allclose(np.asarray(y_graph), np.asarray(y_xla),
+                                   rtol=5e-3, atol=5e-3)
