@@ -16,6 +16,8 @@ same FIFO-replay discipline as bench_scheduling:
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -111,6 +113,62 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
     return trace, sim_fused, sim_layer
 
 
+def run_dispatch(csv=print, img: int = 13, n_deform: int = 2,
+                 width_mult: float = 0.125, tile: int = 4, batch: int = 2,
+                 repeats: int = 3, seed: int = 0):
+    """ISSUE 3 acceptance: batched grid dispatch vs the per-tile loop.
+
+    Same network, same schedules (cache disabled for fair host-cost
+    accounting); reports kernel-dispatch counts, end-to-end wall-clock
+    (best of ``repeats`` after a compile warmup) and the host-prepass
+    overlap fraction of the staged batched path. The batched dispatch
+    count must stay at or below one per layer segment per group.
+    """
+    cfg, params, x = _case(img, n_deform, width_mult, seed)
+    x = jnp.concatenate([x] * batch) if batch > 1 else x
+    graph = build_graph(cfg)
+    y_ref = run_graph_dense(params["convs"], graph, x)
+
+    variants = {
+        "per_tile": GraphConfig(tile=tile, dispatch="per_tile",
+                                staging_depth=1, use_schedule_cache=False),
+        "batched": GraphConfig(tile=tile, dispatch="batched",
+                               staging_depth=2, use_schedule_cache=False),
+    }
+    results = {}
+    for name, gcfg in variants.items():
+        y, trace = run_graph(params["convs"], graph, x, config=gcfg,
+                             return_trace=True)  # warmup: compiles kernels
+        err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                    - y_ref.astype(jnp.float32))))
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            y, trace = run_graph(params["convs"], graph, x, config=gcfg,
+                                 return_trace=True)
+            jax.block_until_ready(y)
+            best = min(best, time.perf_counter() - t0)
+        results[name] = (best, trace, err)
+        csv(f"dispatch_mode,mode={name},wall_ms={1e3 * best:.1f},"
+            f"dispatches={trace.kernel_dispatches},"
+            f"host_overlap_frac={trace.host_overlap_frac:.3f},"
+            f"max_abs_err_vs_xla={err:.2e},"
+            f"ok={'yes' if err < 1e-4 else 'NO'}")
+
+    t_p, tr_p, _ = results["per_tile"]
+    t_b, tr_b, _ = results["batched"]
+    seg_bound = all(g.kernel_dispatches <= len(g.layer_stats)
+                    for g in tr_b.groups)
+    csv(f"dispatch_bench,per_tile_ms={1e3 * t_p:.1f},"
+        f"batched_ms={1e3 * t_b:.1f},speedup={t_p / t_b:.2f}x,"
+        f"per_tile_dispatches={tr_p.kernel_dispatches},"
+        f"batched_dispatches={tr_b.kernel_dispatches},"
+        f"host_overlap_frac={tr_b.host_overlap_frac:.3f},"
+        f"dispatches_le_segments={'yes' if seg_bound else 'NO'},"
+        f"improved={'yes' if t_b < t_p else 'NO'}")
+    return results
+
+
 def run_model_backend(csv=print, img: int = 16, n_deform: int = 2,
                       width_mult: float = 0.125, tile: int = 4,
                       seed: int = 0):
@@ -127,4 +185,5 @@ def run_model_backend(csv=print, img: int = 16, n_deform: int = 2,
 
 if __name__ == "__main__":
     run()
+    run_dispatch()
     run_model_backend()

@@ -8,6 +8,10 @@ one JSON file per benchmark so the CI can archive the perf trajectory:
 
 Each file carries the emitted csv lines verbatim plus parsed key=value
 fields, so downstream tooling can diff runs without re-parsing logs.
+BENCH_graph.json additionally carries top-level ``dispatch_count`` /
+``per_tile_dispatch_count`` / ``host_overlap_frac`` fields, and the run
+exits nonzero (failing the CI bench-smoke job) if the batched dispatch
+count regresses to or above the per-tile baseline.
 """
 
 from __future__ import annotations
@@ -73,10 +77,38 @@ def main(argv=None) -> int:
         "BENCH_graph.json": _collect("graph", [
             (bench_graph.run, dict(img=13, n_deform=2, width_mult=0.125,
                                    tile=4)),
+            (bench_graph.run_dispatch, dict(img=13, n_deform=2,
+                                            width_mult=0.125, tile=4,
+                                            batch=2, repeats=2)),
             (bench_graph.run_model_backend, dict(img=16, n_deform=2,
                                                  width_mult=0.125, tile=4)),
         ]),
     }
+
+    # Dispatch-count regression gate: the batched grid dispatch must stay
+    # strictly below the per-tile baseline (ISSUE 3 acceptance). The CI
+    # bench-smoke job fails on the nonzero exit.
+    rc = 0
+    graph_payload = suites["BENCH_graph.json"]
+    bench = next((r for r in graph_payload["records"]
+                  if r["label"] == "dispatch_bench"), None)
+    if bench is None:
+        print("ERROR: dispatch_bench record missing from bench_graph")
+        rc = 1
+    else:
+        per_tile = int(bench["per_tile_dispatches"])
+        batched = int(bench["batched_dispatches"])
+        graph_payload["dispatch_count"] = batched
+        graph_payload["per_tile_dispatch_count"] = per_tile
+        graph_payload["host_overlap_frac"] = float(
+            bench["host_overlap_frac"])
+        if batched >= per_tile:
+            print(f"ERROR: dispatch_count regressed: batched={batched} "
+                  f">= per_tile baseline={per_tile}")
+            rc = 1
+        if bench["dispatches_le_segments"] != "yes":
+            print("ERROR: batched dispatches exceed layer-segment bound")
+            rc = 1
 
     meta = {"python": platform.python_version(),
             "platform": platform.platform()}
@@ -86,7 +118,7 @@ def main(argv=None) -> int:
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {path}")
-    return 0
+    return rc
 
 
 if __name__ == "__main__":

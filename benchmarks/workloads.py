@@ -65,6 +65,7 @@ def build_workload(name: str, n_deform: int, variant: str,
     conv_f = off_f = bli_f = dconv_f = 0.0
     dbytes = tbytes = 0.0
     kk = 9
+    applied_pools = set()
     for i, (ci, co, deform) in enumerate(plan):
         layer_f = 2.0 * hw * hw * kk * ci * co
         tbytes += hw * hw * (ci + co)
@@ -79,9 +80,11 @@ def build_workload(name: str, n_deform: int, variant: str,
             dbytes += hw * hw * taps * 4 * ci
         else:
             conv_f += layer_f
-        if i < n_enc and i in pools:
-            hw = max(1, hw // 2)
-        elif name == "segnet" and i >= n_enc and (2 * n_enc - 1 - i) in pools:
+        if i < n_enc and i in pools and hw >= 2:
+            hw = hw // 2
+            applied_pools.add(i)
+        elif (name == "segnet" and i >= n_enc
+              and (2 * n_enc - 1 - i) in applied_pools):
             hw *= 2
     return Workload(conv_f, off_f, bli_f, dconv_f, dbytes, tbytes)
 

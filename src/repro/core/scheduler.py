@@ -33,6 +33,13 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+def pow2_pad(x: int) -> int:
+    """Smallest power of two >= max(1, x) — the packed dep-slot padding
+    policy shared by the schedule and both executors (uniform packed
+    geometry -> one kernel compilation per layer)."""
+    return 1 << (max(1, x) - 1).bit_length()
+
+
 @dataclass
 class TileSchedule:
     """Result of Algorithm 1.
@@ -46,6 +53,36 @@ class TileSchedule:
     iid: list[list[int]]
     # Diagnostics filled by the scheduler:
     reuse_overlap: list[int] = field(default_factory=list)  # |B[curr] & B[next]|
+
+    def dense(self, k_pad: int | None = None
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Schedule as dense arrays for batched grid dispatch.
+
+        The batched executor feeds the schedule to ONE ``pallas_call``
+        whose leading grid dimension is the scheduled-tile index, so it
+        needs arrays, not Python lists:
+
+          oid    (T,)        int32 — output tiles in execution order
+          deps   (T, k_pad)  int32 — dependent input tiles in load order,
+                                     rows zero-padded past their count
+          counts (T,)        int32 — true dep count per scheduled tile
+
+        ``k_pad`` defaults to the max dep count rounded up to a power of
+        two (uniform packed-buffer geometry -> one kernel compilation).
+        """
+        t = len(self.oid)
+        k_max = max((len(d) for d in self.iid), default=1)
+        if k_pad is None:
+            k_pad = pow2_pad(k_max)
+        elif k_pad < k_max:
+            raise ValueError(f"k_pad={k_pad} below max dep count {k_max}")
+        oid = np.asarray(self.oid, np.int32).reshape(t)
+        deps = np.zeros((t, k_pad), np.int32)
+        counts = np.zeros((t,), np.int32)
+        for n, d in enumerate(self.iid):
+            deps[n, :len(d)] = d
+            counts[n] = len(d)
+        return oid, deps, counts
 
 
 class FifoBuffer:

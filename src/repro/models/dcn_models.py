@@ -37,7 +37,8 @@ from repro.core.fusion import LayerShape
 from repro.kernels.ops import deformable_conv2d_pallas
 from repro.runtime.fused_exec import GraphConfig, run_graph
 from repro.runtime.graph import build_graph
-from repro.runtime.pipeline import PipelineConfig, dcn_pipeline
+from repro.runtime.pipeline import (PipelineConfig, clamp_tile_config,
+                                    dcn_pipeline)
 
 # (channels, n_convs) per VGG19 stage; maxpool after each stage.
 _VGG19_STAGES = ((64, 2), (128, 2), (256, 4), (512, 4), (512, 4))
@@ -139,7 +140,9 @@ def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
 
     if backend == "graph":
         net_graph = build_graph(cfg)
-        x = run_graph(params["convs"], net_graph, x, config=graph,
+        gcfg = clamp_tile_config(graph or GraphConfig(), x.shape[1],
+                                 x.shape[2])
+        x = run_graph(params["convs"], net_graph, x, config=gcfg,
                       max_displacement=cfg.max_displacement)
         return _apply_head(params, cfg, x, decoder)
 
@@ -152,6 +155,10 @@ def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
             if backend == "pipeline":
                 pcfg = pipeline or PipelineConfig(
                     tile=max(2, min(8, x.shape[1] // 2, x.shape[2] // 2)))
+                # The requested tile is an upper bound: deep-stage planes
+                # shrink below it, so clamp per layer (the raw executor
+                # rejects tile > plane).
+                pcfg = clamp_tile_config(pcfg, x.shape[1], x.shape[2])
                 return dcn_pipeline(x, p, variant=cfg.variant,
                                     max_displacement=cfg.max_displacement,
                                     config=pcfg)
@@ -164,12 +171,17 @@ def dcn_net_apply(params, cfg: DcnNetConfig, x, *, use_pallas: bool = False,
                       max_displacement=cfg.max_displacement)
         return conv2d(x, p["w"], p["b"])
 
+    # Encoder pools are skipped once a plane side drops below 2; each
+    # decoder upsample must mirror a pool that actually ran, or tiny
+    # inputs inflate (img_size=8 used to yield 32x32 segnet logits).
+    applied_pools: set[int] = set()
     for i, (ci, co, deform) in enumerate(plan):
         x = jax.nn.relu(run_conv(params["convs"][i], x, deform))
         if i < n_enc and i in pools and x.shape[1] >= 2 and x.shape[2] >= 2:
             x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-        elif decoder and i >= n_enc and (2 * n_enc - 1 - i) in pools:
+            applied_pools.add(i)
+        elif decoder and i >= n_enc and (2 * n_enc - 1 - i) in applied_pools:
             n, h, w, c = x.shape  # unpool by nearest-neighbour upsample
             x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
 
@@ -191,13 +203,15 @@ def layer_shapes(cfg: DcnNetConfig) -> list[LayerShape]:
     pools = _pool_positions(cfg)
     n_enc = sum(n for _, n in _VGG19_STAGES)
     hw = cfg.img_size
+    applied_pools: set[int] = set()
     out = []
     for i, (ci, co, deform) in enumerate(plan):
         if deform:
             out.append(LayerShape(h=hw, w=hw, c_in=ci, c_out=co,
                                   kernel_size=3, dtype_bytes=1))
-        if i < n_enc and i in pools:
-            hw = max(1, hw // 2)
-        elif decoder and i >= n_enc and (2 * n_enc - 1 - i) in pools:
+        if i < n_enc and i in pools and hw >= 2:
+            hw = hw // 2
+            applied_pools.add(i)
+        elif decoder and i >= n_enc and (2 * n_enc - 1 - i) in applied_pools:
             hw *= 2
     return out

@@ -45,10 +45,12 @@ from repro.runtime.packing import (
     NeighbourTables,
     build_neighbour_tables,
     pack_output_tile,
+    pack_schedule_tiles,
     plane_to_tiles,
 )
 from repro.runtime.pipeline import (
     PipelineConfig,
+    clamp_tile_config,
     dcn_pipeline,
     resolve_interpret,
 )
@@ -57,6 +59,7 @@ from repro.runtime.trace import (
     ImageTrace,
     LayerBufferStats,
     NetworkTrace,
+    OverlapSpans,
     PipelineTrace,
     TileRecord,
 )
@@ -65,6 +68,7 @@ __all__ = [
     "NeighbourTables",
     "build_neighbour_tables",
     "pack_output_tile",
+    "pack_schedule_tiles",
     "plane_to_tiles",
     "PipelineConfig",
     "dcn_pipeline",
@@ -73,6 +77,7 @@ __all__ = [
     "default_schedule_cache",
     "GraphConfig",
     "TileBuffer",
+    "clamp_tile_config",
     "run_graph",
     "run_graph_dense",
     "ConvNode",
@@ -87,6 +92,7 @@ __all__ = [
     "ImageTrace",
     "LayerBufferStats",
     "NetworkTrace",
+    "OverlapSpans",
     "PipelineTrace",
     "TileRecord",
 ]

@@ -13,6 +13,7 @@ entirely. Hit/miss counters surface on ``PipelineTrace``/``NetworkTrace``.
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
@@ -53,13 +54,18 @@ def chain_digest(layer_digests: list[str], grid: TileGrid) -> str:
 
 
 class ScheduleCache:
-    """Bounded LRU mapping schedule keys -> prebuilt schedule artifacts."""
+    """Bounded LRU mapping schedule keys -> prebuilt schedule artifacts.
+
+    Thread-safe: the multi-image staging queue runs prepass (and therefore
+    cache lookups) on a worker thread while the main thread dispatches.
+    """
 
     def __init__(self, maxsize: int = 128):
         if maxsize < 1:
             raise ValueError("maxsize must be >= 1")
         self.maxsize = int(maxsize)
         self._entries: OrderedDict[Hashable, Any] = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
@@ -67,19 +73,21 @@ class ScheduleCache:
         return len(self._entries)
 
     def get(self, key: Hashable) -> Any | None:
-        entry = self._entries.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
 
     def put(self, key: Hashable, value: Any) -> None:
-        self._entries[key] = value
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
 
     def get_or_build(self, key: Hashable, build: Callable[[], Any]
                      ) -> tuple[Any, bool]:
@@ -92,13 +100,15 @@ class ScheduleCache:
         return value, False
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
 
     def info(self) -> dict[str, int]:
-        return {"size": len(self._entries), "maxsize": self.maxsize,
-                "hits": self.hits, "misses": self.misses}
+        with self._lock:
+            return {"size": len(self._entries), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses}
 
 
 _DEFAULT_CACHE = ScheduleCache(maxsize=128)

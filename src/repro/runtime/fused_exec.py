@@ -1,28 +1,46 @@
 """Cross-layer fused network executor (paper §IV-D taken network-wide).
 
-Executes a :class:`~repro.runtime.graph.NetGraph` so that inside each
-:class:`~repro.runtime.graph.FusedGroup` the boundary feature planes
-between layers NEVER materialize in DRAM:
+Executes a :class:`~repro.runtime.graph.NetGraph` under the accelerator's
+cross-layer dataflow: inside each
+:class:`~repro.runtime.graph.FusedGroup`, boundary feature planes between
+layers carry no *modeled* DRAM traffic — the
+:class:`~repro.runtime.trace.NetworkTrace` prices exactly group-input
+tile loads (under the FIFO buffer model), group outputs, weights and
+pool/upsample boundary planes, matching
+``core.simulator.simulate_network`` byte-for-byte:
 
-  prepass   per group, run stage-1 offset convs densely (the paper's
+  prepass   per image, run the stage-1 chain densely (the paper's
             pre-scheduler runs ahead of the PE array) and build one TDT
             per layer — measured ``tdt_from_coords`` for DCN layers,
-            analytic ``tdt_standard_conv`` halos for standard convs;
-  schedule  chain the per-layer TDTs into one composite table
-            (``compose_tdt``) and run ONE Algorithm-1 schedule per group
-            over the *group-input* tiles;
-  execute   walk the schedule; each group-output tile pulls its producer
-            tiles recursively. Intermediate tiles live in a bounded
-            per-layer :class:`TileBuffer` (FIFO eviction, recompute on
-            miss — eviction costs FLOPs, never DRAM), conv tiles run as
-            halo-windowed XLA convs, DCN tiles as the packed fused Pallas
-            kernel (``kernels.dcn_fused``).
+            analytic ``tdt_standard_conv`` halos for standard convs —
+            then chain them (``compose_tdt``) into ONE Algorithm-1
+            schedule per fused group and pack the batched kernel
+            operands. The prepass for image i+1 runs on a staging thread
+            while image i executes on the device
+            (``GraphConfig.staging_depth``).
+  execute   two dispatch modes:
+              * ``"batched"`` (default) — one batched kernel dispatch per
+                (group, layer segment): the group's schedule becomes the
+                leading grid dimension of a single ``pallas_call``
+                (``kernels.dcn_fused.dcn_fused_schedule``), with the
+                scalar-prefetched dep table driving the input-tile DMA
+                sequence; standard-conv segments run as one halo conv
+                over the assembled plane. Dispatches per group drop from
+                O(num_tiles x layers) to n_layers. Interior planes are
+                materialized as whole device arrays between segments
+                (recorded honestly in ``LayerBufferStats``
+                ``max_resident_bytes``) — the paper's bounded on-chip
+                intermediate buffer is modeled by the per_tile mode.
+              * ``"per_tile"`` — the PR 2 demand-driven loop: each
+                group-output tile pulls its producer tiles recursively
+                through a bounded recompute-on-evict :class:`TileBuffer`
+                (eviction costs FLOPs, never modeled DRAM).
 
-Pool/upsample segments between groups execute densely; their plane
-traffic is counted as boundary bytes. The resulting
-:class:`~repro.runtime.trace.NetworkTrace` must agree exactly with
-``core.simulator.simulate_network`` — benchmarks/bench_graph.py asserts
-the cross-check, tests/test_graph.py the numerics vs the XLA reference.
+Both modes execute the same Algorithm-1 schedule, whose group-input load
+order is what the trace records and the simulator prices — batching
+preserves it as the grid order, so the cross-check stays exact.
+benchmarks/bench_graph.py asserts it; tests/test_graph.py +
+tests/test_batched_dispatch.py pin the numerics vs the XLA reference.
 """
 
 from __future__ import annotations
@@ -35,10 +53,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import conv2d, deformable_conv2d, offsets_to_coords
-from repro.core.scheduler import schedule_tiles, sequential_schedule
+from repro.core.scheduler import (TileSchedule, pow2_pad, schedule_tiles,
+                                  sequential_schedule)
 from repro.core.tiles import (TileGrid, compose_tdt_chain, tdt_from_coords,
                               tdt_standard_conv)
-from repro.kernels.dcn_fused import dcn_fused_tile
+from repro.kernels.dcn_fused import dcn_fused_schedule, dcn_fused_tile
 from repro.kernels.ops import round_up
 from repro.runtime.cache import (ScheduleCache, chain_digest, conv_digest,
                                  coords_digest, default_schedule_cache)
@@ -46,8 +65,10 @@ from repro.runtime.graph import (DeformNode, FusedGroup, NetGraph, PoolNode,
                                  Segment, UpsampleNode, boundary_bytes,
                                  group_weight_bytes, partition_graph)
 from repro.runtime.packing import (build_neighbour_tables, pack_output_tile,
-                                   plane_to_tiles, tiles_to_plane)
-from repro.runtime.pipeline import resolve_interpret
+                                   pack_schedule_tiles, plane_to_tiles,
+                                   tiles_to_plane)
+from repro.runtime.pipeline import (clamp_tile_config, resolve_interpret,
+                                    run_staged, validate_dispatch_config)
 from repro.runtime.trace import (GroupTrace, LayerBufferStats, NetworkTrace,
                                  TileRecord)
 
@@ -60,15 +81,26 @@ class GraphConfig:
 
     tile: int | tuple[int, int] = 8       # tile side(s), shared per group
     buffer_tiles: int | None = None       # M for the composite schedule
-    # Intermediate tile-buffer capacity per layer plane. None = derive from
-    # onchip_budget_bytes (budget split across the group's layers); an int
-    # pins it, and undersizing only costs recomputes, never correctness.
+    # Intermediate tile-buffer capacity per layer plane (per_tile dispatch).
+    # None = derive from onchip_budget_bytes (budget split across the
+    # group's layers); an int pins it, and undersizing only costs
+    # recomputes, never correctness.
     inter_buffer_tiles: int | None = None
     schedule: str = "alg1"                # "alg1" | "sequential"
     block_p: int = 128                    # kernel pixel-block size
     interpret: bool | None = None         # None = auto (CPU -> interpret)
     onchip_budget_bytes: int = ONCHIP_BUDGET_BYTES  # drives group planning
     use_schedule_cache: bool = True
+    # "batched": one pallas_call grid per (group, layer segment).
+    # "per_tile": PR 2 demand-driven per-tile dispatch loop.
+    dispatch: str = "batched"
+    # Images staged ahead of execution: 1 = serial, 2 = prepass image i+1
+    # on a worker thread while image i executes (the default), >2 queues
+    # deeper (rarely helps: prepass is single-threaded host work).
+    staging_depth: int = 2
+
+    def __post_init__(self):
+        validate_dispatch_config(self)
 
     @property
     def tile_hw(self) -> tuple[int, int]:
@@ -84,6 +116,7 @@ class TileBuffer:
 
     FIFO eviction like the paper's input buffer; a miss on a previously
     produced tile means recompute (fusion forbids the DRAM round trip).
+    Used by the ``per_tile`` dispatch mode.
     """
 
     def __init__(self, capacity_tiles: int):
@@ -196,6 +229,33 @@ def _assemble_halo(dep_arrays: list, deps: np.ndarray, grid: TileGrid,
     return win
 
 
+@dataclasses.dataclass
+class _LayerDispatch:
+    """One DCN layer's batched-grid operands, packed in the prepass."""
+
+    out_order: np.ndarray                 # (T,) grid order of output tiles
+    dep_tbl: np.ndarray                   # (T, k_pad) scalar-prefetch table
+    dep_cnt: np.ndarray                   # (T,) true dep count per tile
+    idx: np.ndarray                       # (T, p_pad, KK, 4)
+    coeff: np.ndarray                     # (T, p_pad, KK, 4)
+
+
+@dataclasses.dataclass
+class _GroupArtifacts:
+    """Prepass products for one fused group of one image."""
+
+    grid: TileGrid
+    m: int                                # schedule buffer capacity
+    b_layers: list[np.ndarray]            # per-layer TDTs
+    nbs: list                             # per-layer NeighbourTables | None
+    sched: TileSchedule                   # composite Algorithm-1 schedule
+    cache_hit: bool | None
+    # Batched dispatch only: per-layer packed operands (None entries for
+    # conv layers). Packed on the staging thread so the per-image packing
+    # cost overlaps the previous image's execution.
+    packed: list[_LayerDispatch | None] | None = None
+
+
 def _group_schedule_artifacts(
     x_g: jax.Array,
     group: FusedGroup,
@@ -205,15 +265,23 @@ def _group_schedule_artifacts(
     cfg: GraphConfig,
     max_displacement: float | None,
     cache: ScheduleCache | None,
-):
-    """Prepass: per-layer TDTs + neighbour tables + composite schedule.
+    need_out_plane: bool,
+) -> tuple[_GroupArtifacts, jax.Array]:
+    """Prepass for one group: per-layer TDTs + neighbour tables +
+    composite schedule, plus the group's dense output plane when
+    ``need_out_plane`` (a downstream group still holds a DeformNode whose
+    offset conv consumes it — the stage-1 chain runs exactly as far ahead
+    as the deformation reaches, no further).
 
-    Stage-1 offset convs run densely (the hardware pre-scheduler's role);
-    only layers with a downstream DeformNode need their dense plane. The
-    (TDTs, schedule) pair is cached under the quantized-coords chain
+    The (TDTs, schedule) pair is cached under the quantized-coords chain
     digest when a cache is given.
     """
-    needs_plane = [any(isinstance(n, DeformNode) for n in group.nodes[j + 1:])
+    # Dense planes are consumed only by DeformNode offset convs; stop
+    # advancing after the last consumer (monotone: deforms never reappear
+    # past this point within the group when need_out_plane is False).
+    needs_plane = [need_out_plane
+                   or any(isinstance(nd, DeformNode)
+                          for nd in group.nodes[j + 1:])
                    for j in range(group.n_layers)]
     plane = x_g
     nbs: list = []
@@ -256,43 +324,105 @@ def _group_schedule_artifacts(
 
     if cache is None:
         b_layers, sched = build()
-        return b_layers, nbs, sched, None
-    key = (chain_digest(digests, grid), m, cfg.schedule)
-    (b_layers, sched), hit = cache.get_or_build(key, build)
-    return b_layers, nbs, sched, hit
+        hit = None
+    else:
+        key = (chain_digest(digests, grid), m, cfg.schedule)
+        (b_layers, sched), hit = cache.get_or_build(key, build)
+
+    # Pack the batched-grid operands here, on the staging thread. The
+    # schedule cache cannot cover this: idx follows the quantized coords
+    # (the cache key) but the BLI coefficients keep the fractional parts.
+    packed: list[_LayerDispatch | None] | None = None
+    if cfg.dispatch == "batched":
+        tp = grid.th * grid.tw
+        bp = min(cfg.block_p, tp)
+        p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
+        oid_arr = np.asarray(sched.oid, np.int32)
+        last = group.n_layers - 1
+        packed = []
+        for j, node in enumerate(group.nodes):
+            if not isinstance(node, DeformNode):
+                packed.append(None)
+                continue
+            # Grid order: the Algorithm-1 schedule for the group's output
+            # layer; plane order for interior layers (their tiles never
+            # touch DRAM, so order is free).
+            out_order = (oid_arr if j == last
+                         else np.arange(grid.num_tiles, dtype=np.int32))
+            dep_lists = [np.flatnonzero(b_layers[j][t]) for t in out_order]
+            k_pad = pow2_pad(max((len(d) for d in dep_lists), default=1))
+            dep_tbl, dep_cnt, idx, coeff = pack_schedule_tiles(
+                nbs[j], grid, out_order, dep_lists, p_pad, k_pad)
+            packed.append(_LayerDispatch(out_order, dep_tbl, dep_cnt, idx,
+                                         coeff))
+
+    art = _GroupArtifacts(grid=grid, m=m, b_layers=list(b_layers), nbs=nbs,
+                          sched=sched, cache_hit=hit, packed=packed)
+    return art, plane
 
 
-def _run_group(
-    x_g: jax.Array,
+def _image_prepass(
+    x_i: jax.Array,
+    segments: list[Segment],
+    convs: list,
+    cfg: GraphConfig,
+    max_displacement: float | None,
+    cache: ScheduleCache | None,
+) -> list[_GroupArtifacts | None]:
+    """Host-side prepass of one whole image: the dense stage-1 chain runs
+    ahead through the segments as far as the last DeformNode's offset
+    conv needs it, emitting per-group schedule artifacts. Runs on the
+    staging thread so it overlaps device execution of the previous
+    image."""
+    th, tw = cfg.tile_hw
+    # deform_after[s]: a segment AFTER s still contains a DeformNode, so
+    # segment s must keep advancing the dense plane for its prepass.
+    deform_after = [False] * len(segments)
+    seen = False
+    for s in range(len(segments) - 1, -1, -1):
+        deform_after[s] = seen
+        if isinstance(segments[s], FusedGroup) and any(
+                isinstance(nd, DeformNode) for nd in segments[s].nodes):
+            seen = True
+
+    arts: list[_GroupArtifacts | None] = []
+    plane = x_i
+    for s, seg in enumerate(segments):
+        if isinstance(seg, (PoolNode, UpsampleNode)):
+            if deform_after[s]:
+                plane = apply_boundary_dense(plane, seg)
+            arts.append(None)
+        else:
+            h, w = seg.h, seg.w
+            grid = TileGrid(h, w, min(th, h), min(tw, w))
+            m = (grid.num_tiles if cfg.buffer_tiles is None
+                 else cfg.buffer_tiles)
+            art, plane = _group_schedule_artifacts(
+                plane, seg, convs, grid, m, cfg, max_displacement, cache,
+                need_out_plane=deform_after[s])
+            arts.append(art)
+    return arts
+
+
+def _exec_group_per_tile(
+    x_tiles: jax.Array,
     group: FusedGroup,
     convs: list,
     cfg: GraphConfig,
     interpret: bool,
-    max_displacement: float | None,
-    cache: ScheduleCache | None,
-) -> tuple[jax.Array, GroupTrace]:
-    h, w, c_in = x_g.shape
-    th, tw = cfg.tile_hw
-    grid = TileGrid(h, w, min(th, h), min(tw, w))
+    art: _GroupArtifacts,
+    masks: list,
+    dtype_bytes: int,
+) -> tuple[jax.Array, list[LayerBufferStats], int]:
+    """PR 2 demand-driven loop: one kernel dispatch per produced tile,
+    intermediates in bounded recompute-on-evict TileBuffers."""
+    grid, b_layers, nbs, sched = art.grid, art.b_layers, art.nbs, art.sched
     tp = grid.th * grid.tw
-    m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
-    dtype_bytes = x_g.dtype.itemsize
-
-    b_layers, nbs, sched, cache_hit = _group_schedule_artifacts(
-        x_g, group, convs, grid, m, cfg, max_displacement, cache)
-
-    # Per-DCN-layer packing geometry: uniform packed-buffer sizes so each
-    # layer compiles its fused kernel once per group.
     bp = min(cfg.block_p, tp)
     p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
-    k_pad = [1 << (max(1, int(b.sum(axis=1).max())) - 1).bit_length()
-             for b in b_layers]
-
-    x_tiles = plane_to_tiles(x_g, grid)
+    k_pad = [pow2_pad(int(b.sum(axis=1).max())) for b in b_layers]
     buffers = [TileBuffer(_inter_capacity(cfg, group, n, tp, dtype_bytes))
                for n in group.nodes]
-    masks = [jnp.asarray(_tile_valid_mask(grid, t), x_g.dtype)
-             for t in range(grid.num_tiles)]
 
     def produce(j: int, t: int) -> jax.Array:
         if j < 0:
@@ -329,34 +459,121 @@ def _run_group(
         buffers[j].put(t, y, tp * node.c_out * dtype_bytes)
         return y
 
+    last = group.n_layers - 1
+    y_tiles: list = [None] * grid.num_tiles
+    for out_tile in sched.oid:
+        y_tiles[out_tile] = produce(last, out_tile)
+    zero = jnp.zeros((tp, group.c_out), x_tiles.dtype)
+    out = jnp.stack([t if t is not None else zero for t in y_tiles])
+
+    stats = [LayerBufferStats(kind=n.kind, tiles_computed=b.computes,
+                              recomputes=b.recomputes,
+                              max_resident_bytes=b.max_resident_bytes)
+             for n, b in zip(group.nodes, buffers)]
+    dispatches = sum(b.computes for b in buffers)
+    return out, stats, dispatches
+
+
+def _exec_group_batched(
+    x_tiles: jax.Array,
+    group: FusedGroup,
+    convs: list,
+    cfg: GraphConfig,
+    interpret: bool,
+    art: _GroupArtifacts,
+    masks: list,
+    dtype_bytes: int,
+) -> tuple[jax.Array, list[LayerBufferStats], int]:
+    """One batched dispatch per layer segment: DCN layers run the whole
+    tile schedule as a single ``pallas_call`` grid (scalar-prefetched dep
+    table -> scheduled DMA order, operands packed in the prepass), conv
+    layers as one halo conv over the assembled plane; outputs scatter
+    back to tile order in one op."""
+    grid = art.grid
+    h, w = grid.h, grid.w
+    tp = grid.th * grid.tw
+    num = grid.num_tiles
+    masks_arr = jnp.stack(masks)                          # (T, tp, 1)
+    last = group.n_layers - 1
+
+    tiles = x_tiles
+    stats: list[LayerBufferStats] = []
+    dispatches = 0
+    for j, node in enumerate(group.nodes):
+        p = convs[node.param_idx]
+        if isinstance(node, DeformNode):
+            ld = art.packed[j]
+            kk = node.kernel_size ** 2
+            w2 = p.w.reshape(kk, node.c_in, node.c_out)
+            y = dcn_fused_schedule(
+                tiles, jnp.asarray(ld.dep_tbl), jnp.asarray(ld.dep_cnt),
+                jnp.asarray(ld.idx), jnp.asarray(ld.coeff), w2, p.b,
+                kernel_size=node.kernel_size, block_p=cfg.block_p,
+                interpret=interpret)[:, :tp]
+            if node.relu:
+                y = jax.nn.relu(y)
+            y = y * masks_arr[np.asarray(ld.out_order)]
+            if j == last:
+                # Scatter all scheduled outputs back to tile order at once.
+                tiles = jnp.zeros((num, tp, node.c_out), y.dtype)
+                tiles = tiles.at[jnp.asarray(ld.out_order)].set(y)
+            else:
+                tiles = y
+            computed = len(ld.out_order)
+        else:
+            plane = tiles_to_plane(tiles, grid, h, w)
+            yp = conv2d(plane[None], p["w"], p["b"])[0]
+            if node.relu:
+                yp = jax.nn.relu(yp)
+            tiles = plane_to_tiles(yp, grid)
+            computed = num
+        dispatches += 1
+        stats.append(LayerBufferStats(
+            kind=node.kind, tiles_computed=computed, recomputes=0,
+            max_resident_bytes=num * tp * node.c_out * dtype_bytes))
+    return tiles, stats, dispatches
+
+
+def _run_group(
+    x_g: jax.Array,
+    group: FusedGroup,
+    convs: list,
+    cfg: GraphConfig,
+    interpret: bool,
+    art: _GroupArtifacts,
+) -> tuple[jax.Array, GroupTrace]:
+    h, w, c_in = x_g.shape
+    grid, sched = art.grid, art.sched
+    tp = grid.th * grid.tw
+    dtype_bytes = x_g.dtype.itemsize
+
+    x_tiles = plane_to_tiles(x_g, grid)
+    masks = [jnp.asarray(_tile_valid_mask(grid, t), x_g.dtype)
+             for t in range(grid.num_tiles)]
+
+    exec_fn = (_exec_group_batched if cfg.dispatch == "batched"
+               else _exec_group_per_tile)
+    y_tiles, layer_stats, dispatches = exec_fn(
+        x_tiles, group, convs, cfg, interpret, art, masks, dtype_bytes)
+
     tile_bytes = tp * c_in * dtype_bytes
     trace = GroupTrace(
-        grid=grid, tile_bytes=tile_bytes, buffer_tiles=m,
-        schedule=cfg.schedule, schedule_cache_hit=cache_hit,
+        grid=grid, tile_bytes=tile_bytes, buffer_tiles=art.m,
+        schedule=cfg.schedule, schedule_cache_hit=art.cache_hit,
         dtype_bytes=dtype_bytes, layer_channels=group.layer_channels,
         output_bytes=h * w * group.c_out * dtype_bytes,
         weight_bytes=group_weight_bytes(group, dtype_bytes),
-        b_layers=list(b_layers))
-
-    last = group.n_layers - 1
-    y_tiles: list = [None] * grid.num_tiles
+        b_layers=list(art.b_layers),
+        kernel_dispatches=dispatches, dispatch=cfg.dispatch)
+    trace.layer_stats = layer_stats
     for out_tile, loads in zip(sched.oid, sched.iid):
-        y_tiles[out_tile] = produce(last, out_tile)
         trace.records.append(TileRecord(
             out_tile=out_tile,
             dep_tiles=tuple(loads),
             loaded_bytes=len(loads) * tile_bytes,
             buffer_bytes=len(loads) * tile_bytes))
 
-    trace.layer_stats = [
-        LayerBufferStats(kind=n.kind, tiles_computed=b.computes,
-                         recomputes=b.recomputes,
-                         max_resident_bytes=b.max_resident_bytes)
-        for n, b in zip(group.nodes, buffers)]
-
-    zero = jnp.zeros((tp, group.c_out), x_g.dtype)
-    y = tiles_to_plane(jnp.stack([t if t is not None else zero
-                                  for t in y_tiles]), grid, h, w)
+    y = tiles_to_plane(y_tiles, grid, h, w)
     return y, trace
 
 
@@ -368,6 +585,7 @@ def run_graph(
     config: GraphConfig | None = None,
     max_displacement: float | None = None,
     return_trace: bool = False,
+    schedule_cache: ScheduleCache | None = None,
 ):
     """Execute a backbone graph over a batch: (N,H,W,C) -> (N,H',W',C').
 
@@ -376,6 +594,12 @@ def run_graph(
     dicts for ConvNodes. Numerically matches :func:`run_graph_dense` (the
     XLA reference) to float tolerance; with ``return_trace`` additionally
     returns the :class:`NetworkTrace` of the executed DRAM traffic.
+
+    With ``staging_depth > 1`` (the default) image i+1's host prepass
+    runs on a worker thread while image i's kernels execute — the trace's
+    ``host_overlap_frac`` reports how much host time was hidden.
+    ``schedule_cache`` overrides the process-wide cache (serving engines
+    pass their own).
     """
     if isinstance(x, jax.core.Tracer):
         raise ValueError(
@@ -383,8 +607,23 @@ def run_graph(
             "cross-layer schedule is data-dependent, so it cannot run "
             "under jit/grad/vmap. Use backend='xla' for those paths.")
     cfg = config or GraphConfig()
+    if tuple(x.shape[1:]) != (graph.in_h, graph.in_w, graph.in_c):
+        raise ValueError(
+            f"input {tuple(x.shape[1:])} does not match the graph's "
+            f"({graph.in_h}, {graph.in_w}, {graph.in_c}) input plane — "
+            f"rebuild the graph for this image size")
+    th, tw = cfg.tile_hw
+    if th > graph.in_h or tw > graph.in_w:
+        raise ValueError(
+            f"tile {th}x{tw} exceeds the {graph.in_h}x{graph.in_w} input "
+            f"plane — a degenerate 1-tile grid; choose tile sides <= the "
+            f"plane (interior groups at lower resolution are clamped "
+            f"automatically)")
     interpret = resolve_interpret(cfg.interpret)
-    cache = default_schedule_cache() if cfg.use_schedule_cache else None
+    if schedule_cache is not None:
+        cache: ScheduleCache | None = schedule_cache
+    else:
+        cache = default_schedule_cache() if cfg.use_schedule_cache else None
     segments = partition_graph(graph, cfg.onchip_budget_bytes,
                                dtype_bytes=x.dtype.itemsize)
 
@@ -394,22 +633,29 @@ def run_graph(
         h, w, c = graph.out_shape
         y = jnp.zeros((0, h, w, c), x.dtype)
         return (y, trace) if return_trace else y
-    outs = []
-    for i in range(n):
+
+    def prepass(i: int):
+        return _image_prepass(x[i], segments, convs, cfg, max_displacement,
+                              cache)
+
+    def execute_image(i: int, arts) -> jax.Array:
         plane = x[i]
         g = 0
-        for seg in segments:
-            if isinstance(seg, (PoolNode, UpsampleNode)):
+        for seg, art in zip(segments, arts):
+            if art is None:
                 plane = apply_boundary_dense(plane, seg)
                 trace.boundary_bytes += boundary_bytes(seg,
                                                        x.dtype.itemsize)
             else:
                 plane, gt = _run_group(plane, seg, convs, cfg, interpret,
-                                       max_displacement, cache)
+                                       art)
                 gt.image, gt.group = i, g
                 g += 1
                 trace.groups.append(gt)
-        outs.append(plane)
+        return plane
+
+    outs = run_staged(n, prepass, execute_image, cfg.staging_depth,
+                      trace.overlap)
     y = jnp.stack(outs)
     return (y, trace) if return_trace else y
 

@@ -207,6 +207,10 @@ def build_graph(cfg: "DcnNetConfig") -> NetGraph:
 
     nodes: list[Node] = []
     h = w = cfg.img_size
+    # Mirror the executed network exactly: encoder pools are skipped once
+    # a plane side drops below 2, and a decoder upsample only pairs with a
+    # pool that actually ran (shape parity for tiny inputs).
+    applied_pools: set[int] = set()
     for i, (ci, co, deform) in enumerate(plan):
         if deform:
             nodes.append(DeformNode(i, ci, co, h, w, variant=cfg.variant))
@@ -215,7 +219,8 @@ def build_graph(cfg: "DcnNetConfig") -> NetGraph:
         if i < n_enc and i in pools and h >= 2 and w >= 2:
             nodes.append(PoolNode(h, w, co))
             h, w = nodes[-1].out_h, nodes[-1].out_w
-        elif decoder and i >= n_enc and (2 * n_enc - 1 - i) in pools:
+            applied_pools.add(i)
+        elif decoder and i >= n_enc and (2 * n_enc - 1 - i) in applied_pools:
             nodes.append(UpsampleNode(h, w, co))
             h, w = nodes[-1].out_h, nodes[-1].out_w
     return NetGraph(tuple(nodes), cfg.img_size, cfg.img_size,

@@ -5,13 +5,24 @@
 the stage-1 offset conv runs dense (XLA), the resulting sampling
 coordinates drive a per-image tile dependency table and Algorithm-1
 schedule (host side, as the paper's scheduler is a dedicated hardware
-block running ahead of the PE array), and each schedule entry dispatches
-the fused BLI(+)conv Pallas kernel over a packed buffer holding exactly
-the output tile's dependent input tiles.
+block running ahead of the PE array), and the schedule executes through
+the fused BLI(+)conv Pallas kernel.
+
+Two dispatch modes (``PipelineConfig.dispatch``):
+
+  * ``"batched"`` (default) — the whole schedule is ONE ``pallas_call``:
+    the scheduled-tile index is the leading grid dimension and the
+    scalar-prefetched dep table drives the input-tile DMA order
+    (``kernels.dcn_fused.dcn_fused_schedule``); outputs scatter back in
+    one op. One kernel dispatch per image.
+  * ``"per_tile"`` — the PR 1 loop: one packed-buffer kernel dispatch per
+    schedule entry.
 
 Scheduling is data-dependent (it inspects the offsets), so the executor
 is a host-driven loop rather than one jitted graph — the same structural
 split as the hardware, where pre-scheduling runs concurrently with
+execution. With ``staging_depth > 1`` the prepass (TDT + schedule +
+packing) of image i+1 runs on a worker thread under image i's device
 execution. Gradients do not flow through this path; training uses the
 XLA ``fused_deformable_conv2d`` (checkpoint) formulation.
 """
@@ -19,18 +30,23 @@ XLA ``fused_deformable_conv2d`` (checkpoint) formulation.
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import DeformableConvParams, conv2d, offsets_to_coords
-from repro.core.scheduler import schedule_tiles, sequential_schedule
+from repro.core.scheduler import (TileSchedule, schedule_tiles,
+                                  sequential_schedule)
 from repro.core.tiles import TileGrid, tdt_from_coords
-from repro.kernels.dcn_fused import dcn_fused_tile
+from repro.kernels.dcn_fused import dcn_fused_schedule, dcn_fused_tile
 from repro.kernels.ops import round_up
 from repro.runtime.cache import coords_digest, default_schedule_cache
-from repro.runtime.packing import (build_neighbour_tables, pack_output_tile,
+from repro.runtime.packing import (NeighbourTables, build_neighbour_tables,
+                                   pack_output_tile, pack_schedule_tiles,
                                    plane_to_tiles, tiles_to_plane)
 from repro.runtime.trace import ImageTrace, PipelineTrace, TileRecord
 
@@ -43,6 +59,71 @@ def resolve_interpret(flag: bool | None) -> bool:
     return bool(flag)
 
 
+def run_staged(n: int, prepass, execute, depth: int, overlap) -> list:
+    """The multi-image staging queue shared by both executors.
+
+    ``prepass(i)`` builds image i's host-side artifacts, ``execute(i,
+    art)`` dispatches its kernels. With ``depth > 1`` up to ``depth - 1``
+    prepasses run ahead on a single worker thread while the main thread
+    executes (jax dispatch is itself async, so the device stays busy
+    under the host-side schedule build); ``overlap`` (an
+    :class:`~repro.runtime.trace.OverlapSpans`) accumulates how much
+    prepass time was hidden. Returns the per-image execute results.
+    """
+
+    def timed(i: int):
+        t0 = time.perf_counter()
+        art = prepass(i)
+        return art, time.perf_counter() - t0
+
+    outs = []
+    if depth == 1 or n == 1:
+        for i in range(n):
+            art, dur = timed(i)
+            overlap.prepass_s += dur
+            overlap.prepass_wait_s += dur
+            outs.append(execute(i, art))
+        return outs
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        futs: deque = deque()
+        nxt = 0
+        while nxt < n and len(futs) < depth - 1:
+            futs.append(pool.submit(timed, nxt))
+            nxt += 1
+        for i in range(n):
+            t0 = time.perf_counter()
+            art, dur = futs.popleft().result()
+            overlap.prepass_wait_s += time.perf_counter() - t0
+            overlap.prepass_s += dur
+            if nxt < n:
+                futs.append(pool.submit(timed, nxt))
+                nxt += 1
+            outs.append(execute(i, art))
+    return outs
+
+
+def validate_dispatch_config(cfg) -> None:
+    """Shared ``__post_init__`` checks of the executor configs: tile
+    sides, dispatch mode and staging depth."""
+    cfg.tile_hw                          # validates tile sides
+    if cfg.dispatch not in ("batched", "per_tile"):
+        raise ValueError(f"unknown dispatch mode: {cfg.dispatch!r}")
+    if cfg.staging_depth < 1:
+        raise ValueError(
+            f"staging_depth must be >= 1, got {cfg.staging_depth}")
+
+
+def clamp_tile_config(cfg, h: int, w: int):
+    """Clamp a config's tile to an (h, w) input plane — the model and
+    serving entry points accept any image size, while the raw executors
+    reject tile > plane (a silent 1-tile grid otherwise). Works for both
+    ``PipelineConfig`` and ``GraphConfig``."""
+    th, tw = cfg.tile_hw
+    if th <= h and tw <= w:
+        return cfg
+    return dataclasses.replace(cfg, tile=(min(th, h), min(tw, w)))
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     """Executor knobs (everything except the layer's own parameters)."""
@@ -53,6 +134,15 @@ class PipelineConfig:
     block_p: int = 128                   # kernel pixel-block size
     interpret: bool | None = None        # Pallas interpret; None = auto
     use_schedule_cache: bool = True      # LRU-cache TDT+Algorithm-1 builds
+    # "batched": the whole schedule as one pallas_call grid.
+    # "per_tile": one kernel dispatch per schedule entry (PR 1).
+    dispatch: str = "batched"
+    # Images staged ahead: 1 = serial, 2 (default) = prepass image i+1 on
+    # a worker thread while image i executes.
+    staging_depth: int = 2
+
+    def __post_init__(self):
+        validate_dispatch_config(self)
 
     @property
     def tile_hw(self) -> tuple[int, int]:
@@ -63,19 +153,30 @@ class PipelineConfig:
         return th, tw
 
 
-def _pipeline_single(
-    x_i: jax.Array,           # (H, W, C_in)
+@dataclasses.dataclass
+class _ImageArtifacts:
+    """Prepass products of one image: schedule + packed kernel operands."""
+
+    sched: TileSchedule
+    cache_hit: bool | None
+    nb: NeighbourTables
+    k_pad: int
+    # batched dispatch only: stacked kernel operands for the whole schedule
+    dep_tbl: np.ndarray | None = None
+    dep_cnt: np.ndarray | None = None
+    idx: np.ndarray | None = None
+    coeff: np.ndarray | None = None
+
+
+def _pipeline_prepass(
     coords_i: jax.Array,      # (H, W, KK, 2)
-    w2: jax.Array,            # (KK, C_in, C_out)
-    b: jax.Array,             # (C_out,)
-    kernel_size: int,
+    grid: TileGrid,
+    m: int,
+    p_pad: int,
     cfg: PipelineConfig,
-) -> tuple[jax.Array, ImageTrace]:
-    h, w, c = x_i.shape
-    th, tw = cfg.tile_hw
-    grid = TileGrid(h, w, min(th, h), min(tw, w))
-    tp = grid.th * grid.tw
-    m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
+) -> _ImageArtifacts:
+    """Host-side prepass of one image: TDT -> schedule (cached) ->
+    neighbour tables -> (batched) group-level packed operands."""
 
     def build_schedule():
         B = np.asarray(tdt_from_coords(coords_i, grid, grid))
@@ -92,43 +193,82 @@ def _pipeline_single(
     else:
         sched, cache_hit = build_schedule(), None
 
-    x_tiles = plane_to_tiles(x_i, grid)               # (T, tp, C)
     nb = build_neighbour_tables(coords_i, grid)
-
     # Uniform packed-buffer size across the image's dispatches (single
     # kernel compilation): dependent-tile count padded to a power of two.
-    k_max = max(len(d) for d in sched.iid)
-    k_pad = 1 << (k_max - 1).bit_length()
-    bp = min(cfg.block_p, tp)
-    p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
+    oid, deps, counts = sched.dense()
+    k_pad = deps.shape[1]
+    art = _ImageArtifacts(sched=sched, cache_hit=cache_hit, nb=nb,
+                          k_pad=k_pad)
+    if cfg.dispatch == "batched":
+        dep_lists = [d[:c] for d, c in zip(deps, counts)]
+        art.dep_tbl, art.dep_cnt, art.idx, art.coeff = pack_schedule_tiles(
+            nb, grid, oid, dep_lists, p_pad, k_pad)
+    return art
+
+
+def _pipeline_exec(
+    x_i: jax.Array,           # (H, W, C_in)
+    art: _ImageArtifacts,
+    w2: jax.Array,            # (KK, C_in, C_out)
+    b: jax.Array,             # (C_out,)
+    kernel_size: int,
+    cfg: PipelineConfig,
+    grid: TileGrid,
+    m: int,
+    p_pad: int,
+    interpret: bool,
+) -> tuple[jax.Array, ImageTrace]:
+    h, w, c = x_i.shape
+    tp = grid.th * grid.tw
+    sched, nb, k_pad = art.sched, art.nb, art.k_pad
+    c_out = w2.shape[-1]
 
     tile_bytes = tp * c * x_i.dtype.itemsize
     trace = ImageTrace(grid=grid, tile_bytes=tile_bytes, buffer_tiles=m,
-                       schedule=cfg.schedule, schedule_cache_hit=cache_hit)
+                       schedule=cfg.schedule,
+                       schedule_cache_hit=art.cache_hit,
+                       dispatch=cfg.dispatch)
 
-    c_out = w2.shape[-1]
-    y_tiles = [None] * grid.num_tiles
-    for out_tile, deps in zip(sched.oid, sched.iid):
-        idx, coeff = pack_output_tile(nb, grid, out_tile, deps, p_pad)
-        x_packed = x_tiles[jnp.asarray(deps, jnp.int32)]  # (k, tp, C)
-        if len(deps) < k_pad:
-            x_packed = jnp.pad(
-                x_packed, ((0, k_pad - len(deps)), (0, 0), (0, 0)))
-        y_t = dcn_fused_tile(
-            x_packed.reshape(k_pad * tp, c),
-            jnp.asarray(idx), jnp.asarray(coeff), w2, b,
+    x_tiles = plane_to_tiles(x_i, grid)               # (T, tp, C)
+    buffer_bytes = k_pad * tp * c * x_i.dtype.itemsize
+
+    if cfg.dispatch == "batched":
+        y_sched = dcn_fused_schedule(
+            x_tiles, jnp.asarray(art.dep_tbl), jnp.asarray(art.dep_cnt),
+            jnp.asarray(art.idx), jnp.asarray(art.coeff), w2, b,
             kernel_size=kernel_size, block_p=cfg.block_p,
-            interpret=resolve_interpret(cfg.interpret))
-        y_tiles[out_tile] = y_t[:tp]
+            interpret=interpret)[:, :tp]
+        oid = np.asarray(sched.oid, np.int32)
+        y_tiles = jnp.zeros((grid.num_tiles, tp, c_out), x_i.dtype)
+        y_tiles = y_tiles.at[jnp.asarray(oid)].set(y_sched)
+        trace.kernel_dispatches = 1
+    else:
+        tiles: list = [None] * grid.num_tiles
+        for out_tile, deps in zip(sched.oid, sched.iid):
+            idx, coeff = pack_output_tile(nb, grid, out_tile, deps, p_pad)
+            x_packed = x_tiles[jnp.asarray(deps, jnp.int32)]  # (k, tp, C)
+            if len(deps) < k_pad:
+                x_packed = jnp.pad(
+                    x_packed, ((0, k_pad - len(deps)), (0, 0), (0, 0)))
+            y_t = dcn_fused_tile(
+                x_packed.reshape(k_pad * tp, c),
+                jnp.asarray(idx), jnp.asarray(coeff), w2, b,
+                kernel_size=kernel_size, block_p=cfg.block_p,
+                interpret=interpret)
+            tiles[out_tile] = y_t[:tp]
+            trace.kernel_dispatches += 1
+        zero = jnp.zeros((tp, c_out), x_i.dtype)
+        y_tiles = jnp.stack([t if t is not None else zero for t in tiles])
+
+    for out_tile, deps in zip(sched.oid, sched.iid):
         trace.records.append(TileRecord(
             out_tile=out_tile,
             dep_tiles=tuple(deps),
             loaded_bytes=len(deps) * tile_bytes,
-            buffer_bytes=k_pad * tp * c * x_i.dtype.itemsize))
+            buffer_bytes=buffer_bytes))
 
-    zero = jnp.zeros((tp, c_out), x_i.dtype)
-    y = tiles_to_plane(jnp.stack([t if t is not None else zero
-                                  for t in y_tiles]), grid, h, w)
+    y = tiles_to_plane(y_tiles, grid, h, w)
     return y, trace
 
 
@@ -150,10 +290,12 @@ def dcn_pipeline(
     """Scheduler-driven deformable conv over a batch: (N,H,W,C) -> (N,H,W,O).
 
     Per batch element: stage-1 offsets -> coords -> TDT -> Algorithm-1
-    schedule -> packed-tile fused-kernel dispatches -> scatter. Numerically
-    matches ``core.deform.deformable_conv2d`` (the XLA reference) to float
-    tolerance; additionally returns a :class:`PipelineTrace` of the actual
-    packed-tile traffic when ``return_trace`` is set.
+    schedule -> fused-kernel execution (one batched grid dispatch per
+    image by default; per-tile dispatches with ``dispatch="per_tile"``)
+    -> scatter. Numerically matches ``core.deform.deformable_conv2d``
+    (the XLA reference) to float tolerance; additionally returns a
+    :class:`PipelineTrace` of the actual packed-tile traffic when
+    ``return_trace`` is set.
 
     ``config`` overrides the individual executor keywords when given.
     """
@@ -166,7 +308,12 @@ def dcn_pipeline(
     cfg = config or PipelineConfig(tile=tile, buffer_tiles=buffer_tiles,
                                    schedule=schedule, block_p=block_p,
                                    interpret=interpret)
-    n = x.shape[0]
+    n, h, w = x.shape[0], x.shape[1], x.shape[2]
+    th, tw = cfg.tile_hw
+    if th > h or tw > w:
+        raise ValueError(
+            f"tile {th}x{tw} exceeds the {h}x{w} feature plane — a "
+            f"degenerate 1-tile grid; choose tile sides <= the plane")
     kk = kernel_size * kernel_size
     c_out = params.w.shape[-1]
 
@@ -179,11 +326,24 @@ def dcn_pipeline(
     if n == 0:
         y = jnp.zeros(x.shape[:3] + (c_out,), x.dtype)
         return (y, trace) if return_trace else y
-    outs = []
-    for i in range(n):
-        y_i, tr = _pipeline_single(x[i], coords[i], w2, params.b,
-                                   kernel_size, cfg)
-        outs.append(y_i)
+
+    grid = TileGrid(h, w, th, tw)
+    tp = grid.th * grid.tw
+    m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
+    bp = min(cfg.block_p, tp)
+    p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
+    interp = resolve_interpret(cfg.interpret)
+
+    def prepass(i: int) -> _ImageArtifacts:
+        return _pipeline_prepass(coords[i], grid, m, p_pad, cfg)
+
+    def execute(i: int, art: _ImageArtifacts) -> jax.Array:
+        y_i, tr = _pipeline_exec(x[i], art, w2, params.b, kernel_size,
+                                 cfg, grid, m, p_pad, interp)
         trace.images.append(tr)
+        return y_i
+
+    outs = run_staged(n, prepass, execute, cfg.staging_depth,
+                      trace.overlap)
     y = jnp.stack(outs)
     return (y, trace) if return_trace else y

@@ -41,6 +41,11 @@ class ImageTrace:
     records: list[TileRecord] = field(default_factory=list)
     # None = schedule cache disabled for this image; True/False = hit/miss.
     schedule_cache_hit: bool | None = None
+    # Kernel-dispatch accounting: host-issued compute dispatches (fused
+    # Pallas calls + halo convs). Per-tile dispatch pays one per schedule
+    # entry; batched grid dispatch pays one per layer segment.
+    kernel_dispatches: int = 0
+    dispatch: str = "per_tile"   # "per_tile" | "batched"
 
     @property
     def packed_tile_loads(self) -> int:
@@ -70,14 +75,41 @@ class ImageTrace:
 
 
 @dataclass
+class OverlapSpans:
+    """Host-prepass vs device-execution overlap accounting of one executor
+    call (the multi-image staging queue): how much of the host-side
+    prepass (stage-1 offsets, TDT build, schedule, packing) was hidden
+    under device execution of earlier images."""
+
+    prepass_s: float = 0.0       # total host prepass wall time
+    prepass_wait_s: float = 0.0  # prepass time the execute loop blocked on
+
+    @property
+    def host_overlap_frac(self) -> float:
+        """Fraction of prepass time hidden under execution (0 = serial)."""
+        if self.prepass_s <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.prepass_wait_s / self.prepass_s)
+
+
+@dataclass
 class PipelineTrace:
     """Per-image traces of one ``dcn_pipeline`` call."""
 
     images: list[ImageTrace] = field(default_factory=list)
+    overlap: OverlapSpans = field(default_factory=OverlapSpans)
 
     @property
     def packed_bytes(self) -> int:
         return sum(im.packed_bytes for im in self.images)
+
+    @property
+    def kernel_dispatches(self) -> int:
+        return sum(im.kernel_dispatches for im in self.images)
+
+    @property
+    def host_overlap_frac(self) -> float:
+        return self.overlap.host_overlap_frac
 
     @property
     def packed_tile_loads(self) -> int:
@@ -158,6 +190,15 @@ class NetworkTrace:
 
     groups: list[GroupTrace] = field(default_factory=list)
     boundary_bytes: int = 0      # pool/upsample plane read+write traffic
+    overlap: OverlapSpans = field(default_factory=OverlapSpans)
+
+    @property
+    def kernel_dispatches(self) -> int:
+        return sum(g.kernel_dispatches for g in self.groups)
+
+    @property
+    def host_overlap_frac(self) -> float:
+        return self.overlap.host_overlap_frac
 
     @property
     def input_load_bytes(self) -> int:

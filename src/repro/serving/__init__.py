@@ -1,1 +1,1 @@
-from repro.serving.engine import DecodeEngine, Request
+from repro.serving.engine import DcnServingEngine, DecodeEngine, Request

@@ -1,16 +1,23 @@
-"""Batched decode engine: continuous-batching KV/state cache management.
+"""Serving engines: LM decode batching + DCN graph-backend inference.
 
-The serving counterpart of launch/train.py. A fixed pool of ``batch``
-cache slots; requests are admitted into free slots (continuous batching),
-step() decodes one token for every active slot in a single jit'd call,
-finished slots (EOS or max_len) are released and refilled. Per-slot
-positions make the batch ragged-safe: each slot attends only to its own
-``pos`` prefix.
+``DecodeEngine`` is the LM serving counterpart of launch/train.py: a
+fixed pool of ``batch`` cache slots; requests are admitted into free
+slots (continuous batching), step() decodes one token for every active
+slot in a single jit'd call, finished slots (EOS or max_len) are
+released and refilled. Per-slot positions make the batch ragged-safe:
+each slot attends only to its own ``pos`` prefix.
 
 Prefill here is incremental (the decode step consumed token by token) for
 simplicity of cache layout; the ``prefill_32k`` dry-run cell lowers the
 batched full-sequence prefill (lm.lm_prefill), which is the production
 prefill path.
+
+``DcnServingEngine`` serves DCN vision models through the network-graph
+executor (``backend="graph"``) with a per-engine schedule cache: replayed
+requests whose quantized sampling coordinates match a previous request
+skip the host-side TDT + Algorithm-1 rebuild entirely, so steady-state
+serving pays only the batched kernel dispatches. ``stats`` exposes the
+cache hit rate and dispatch/overlap counters.
 """
 
 from __future__ import annotations
@@ -116,3 +123,75 @@ class DecodeEngine:
             if active == 0 and not self.queue:
                 break
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# DCN graph-backend serving
+# ---------------------------------------------------------------------------
+
+
+class DcnServingEngine:
+    """Inference service for the paper's DCN networks over the graph
+    executor (cross-layer fused groups, batched tile-grid dispatch).
+
+    Each request is an image batch; the engine owns a
+    :class:`~repro.runtime.cache.ScheduleCache` so per-request coords
+    digests are shared across requests — a replayed input (same quantized
+    stage-1 sampling pattern) skips host scheduling and goes straight to
+    the batched kernel dispatches. Typical serving traffic is bursts of
+    near-duplicate frames (video, retries, canaries), which is exactly
+    the cache's hit population.
+    """
+
+    def __init__(self, params, cfg, *, graph=None, cache_size: int = 256):
+        # Local imports keep the LM serving path import-light.
+        from repro.models.dcn_models import DcnNetConfig
+        from repro.runtime import (GraphConfig, OverlapSpans, ScheduleCache,
+                                   build_graph)
+
+        if not isinstance(cfg, DcnNetConfig):
+            raise ValueError(
+                f"DcnServingEngine needs a DcnNetConfig, got {type(cfg)}")
+        self.params = params
+        self.cfg = cfg
+        self.graph_cfg = graph or GraphConfig()
+        self.net_graph = build_graph(cfg)
+        self.cache = ScheduleCache(maxsize=cache_size)
+        self.requests = 0
+        self.images = 0
+        self.kernel_dispatches = 0
+        self.overlap = OverlapSpans()
+
+    def infer(self, x: jax.Array) -> jax.Array:
+        """Serve one request batch (N, H, W, C) -> logits."""
+        from repro.models.dcn_models import _apply_head
+        from repro.runtime import clamp_tile_config, run_graph
+
+        gcfg = clamp_tile_config(self.graph_cfg, x.shape[1], x.shape[2])
+        y, trace = run_graph(self.params["convs"], self.net_graph, x,
+                             config=gcfg,
+                             max_displacement=self.cfg.max_displacement,
+                             return_trace=True, schedule_cache=self.cache)
+        self.requests += 1
+        self.images += int(x.shape[0])
+        self.kernel_dispatches += trace.kernel_dispatches
+        self.overlap.prepass_s += trace.overlap.prepass_s
+        self.overlap.prepass_wait_s += trace.overlap.prepass_wait_s
+        return _apply_head(self.params, self.cfg, y,
+                           self.cfg.name == "segnet")
+
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Serving counters: schedule-cache hit/miss + dispatch/overlap."""
+        info = self.cache.info()
+        total = info["hits"] + info["misses"]
+        return {
+            "requests": self.requests,
+            "images": self.images,
+            "schedule_cache_hits": info["hits"],
+            "schedule_cache_misses": info["misses"],
+            "schedule_cache_hit_rate": (info["hits"] / total) if total else 0.0,
+            "schedule_cache_size": info["size"],
+            "kernel_dispatches": self.kernel_dispatches,
+            "host_overlap_frac": self.overlap.host_overlap_frac,
+        }

@@ -80,12 +80,15 @@ class TestGraphOracle:
 
     def test_bounded_tile_buffer_recomputes_not_wrong(self):
         """A 1-tile intermediate buffer forces evict+recompute; numerics
-        must not change and recomputes must actually happen."""
+        must not change and recomputes must actually happen (bounded
+        buffers are a per_tile-dispatch mechanism — batched dispatch
+        computes every tile exactly once)."""
         convs, graph, x = _acceptance_case(seed=2)
         y_ref = run_graph_dense(convs, graph, x)
         y, trace = run_graph(
             convs, graph, x,
-            config=GraphConfig(tile=4, inter_buffer_tiles=1),
+            config=GraphConfig(tile=4, inter_buffer_tiles=1,
+                               dispatch="per_tile"),
             return_trace=True)
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=1e-4, atol=1e-4)
@@ -198,6 +201,22 @@ class TestGraphIR:
         comp = compose_tdt(b1, b1)
         assert (comp & ~b1).sum() >= 0
         assert comp.sum() >= b1.sum()
+
+    def test_segnet_decoder_shape_parity(self):
+        """Every decoder upsample pairs with a pool that actually ran:
+        tiny segnet inputs must come back at input resolution (img_size=8
+        used to produce 32x32 logits), in the model AND the graph IR."""
+        cfg = DcnNetConfig(name="segnet", n_deform=2, img_size=8,
+                           width_mult=0.125, num_classes=3)
+        graph = build_graph(cfg)
+        assert graph.out_shape[:2] == (8, 8)
+        pools = sum(isinstance(n, PoolNode) for n in graph.nodes)
+        ups = sum(isinstance(n, UpsampleNode) for n in graph.nodes)
+        assert pools == ups
+        p = init_dcn_net(jax.random.PRNGKey(0), cfg)
+        x = jnp.zeros((1, 8, 8, 3))
+        y = dcn_net_apply(p, cfg, x, backend="xla", fused=False)
+        assert y.shape == (1, 8, 8, 3)
 
     def test_build_graph_mirrors_model(self):
         cfg = DcnNetConfig(name="vgg19", n_deform=2, img_size=16,
