@@ -17,8 +17,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.deform import conv2d, init_deformable_conv, offsets_to_coords
-from repro.core.tiles import access_histogram, make_square_grid, \
-    tile_access_histogram
+from repro.core.tiles import make_square_grid, tile_access_histogram
 
 import jax
 import jax.numpy as jnp
@@ -56,8 +55,9 @@ def run(csv=print):
 
     grid = make_square_grid(h, w, 5)
     th = np.asarray(tile_access_histogram(coords, grid)).astype(float)
+    # notable cv -> scheduling headroom
     csv(f"fig3b_tiles,min={th.min():.0f},max={th.max():.0f},"
-        f"cv={th.std()/th.mean():.2f}  # notable variation -> scheduling headroom")
+        f"cv={th.std()/th.mean():.2f}")
     assert th.max() / max(th.min(), 1) > 1.2, \
         "tile utilization should vary (paper Fig. 3b)"
     return hist, th

@@ -91,9 +91,11 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
         csv(f"graph_xcheck,group={gt.group},n_layers={rep.n_layers},"
             f"exec_fifo_loads={exec_loads},sim_loads={rep.tile_loads},"
             f"match={'yes' if match else 'NO'}")
+    total_exact = (exact
+                   and trace.total_dram_bytes == sim_fused.total_dram_bytes)
     csv(f"graph_xcheck_total,exec_dram_bytes={trace.total_dram_bytes},"
         f"sim_fused_bytes={sim_fused.total_dram_bytes},"
-        f"exact={'yes' if exact and trace.total_dram_bytes == sim_fused.total_dram_bytes else 'NO'}")
+        f"exact={'yes' if total_exact else 'NO'}")
 
     for g_f, g_l in zip(sim_fused.groups, sim_layer.groups):
         if g_f.n_layers > 1:
@@ -102,12 +104,14 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
                 f"layerwise_bytes={g_l.total_dram_bytes},"
                 f"saved={g_l.total_dram_bytes - g_f.total_dram_bytes}")
     red = 1 - sim_fused.total_dram_bytes / sim_layer.total_dram_bytes
+    below = sim_fused.total_dram_bytes < sim_layer.total_dram_bytes
     csv(f"fig18_network,fused_dram_bytes={sim_fused.total_dram_bytes},"
         f"layerwise_dram_bytes={sim_layer.total_dram_bytes},"
         f"reduction={100*red:.1f}%,"
-        f"strictly_below={'yes' if sim_fused.total_dram_bytes < sim_layer.total_dram_bytes else 'NO'}")
+        f"strictly_below={'yes' if below else 'NO'}")
+    max_res = max((g.max_resident_bytes for g in trace.groups), default=0)
     csv(f"graph_buffers,recomputes={trace.total_recomputes},"
-        f"max_resident_bytes={max((g.max_resident_bytes for g in trace.groups), default=0)},"
+        f"max_resident_bytes={max_res},"
         f"schedule_cache_hits={trace.schedule_cache_hits},"
         f"misses={trace.schedule_cache_misses}")
     return trace, sim_fused, sim_layer

@@ -22,11 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.scheduler import schedule_tiles, FifoBuffer
-from repro.core.simulator import DramEnergyModel, simulate_strategies
+from repro.core.scheduler import FifoBuffer, schedule_tiles
+from repro.core.simulator import DramEnergyModel
 
-from benchmarks.workloads import (NETWORKS, VARIANTS, Workload,
-                                  build_workload, measured_tdt, net_label)
+from benchmarks.workloads import (NETWORKS, VARIANTS, build_workload,
+                                  measured_tdt, net_label)
 
 # --- platform constants (public spec numbers; see module docstring) ----
 ARM_DENSE = 3.6e9

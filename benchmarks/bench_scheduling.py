@@ -14,13 +14,19 @@ ours.
 
 from __future__ import annotations
 
+import time
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import conv2d, offsets_to_coords
+from repro.core.scheduler import assemble_device_schedule, schedule_tiles
 from repro.core.simulator import dram_energy, simulate_strategies
 from repro.core.tiles import TileGrid, per_pixel_input_tiles, tdt_from_coords
-from repro.runtime import dcn_pipeline
+from repro.kernels.dcn_schedule import (greedy_schedule_arrays,
+                                        tdt_from_coords_device)
+from repro.runtime import PipelineConfig, dcn_pipeline, resolve_interpret
 
 from benchmarks.workloads import (NETWORKS, executor_case, measured_tdt,
                                   net_label)
@@ -110,6 +116,91 @@ def run_executor(csv=print, h: int = 24, w: int = 24, c: int = 16,
     return reports, trace
 
 
+def run_backends(csv=print, h: int = 24, w: int = 24, c: int = 8,
+                 c_out: int = 8, tile: int = 8, buffer_tiles: int = 4,
+                 repeats: int = 3, seed: int = 0):
+    """Host-vs-device scheduling backends on one real deformable layer.
+
+    Times the per-image schedule build both ways and checks the device
+    path emits bit-identical ``TileSchedule``s:
+
+      * host backend — the full TDT scatter + Algorithm-1 greedy loop in
+        host numpy/Python (the staging thread's scheduling cost today);
+      * device backend — the Pallas kernels do the scatter + selection;
+        the host residue is reassembling the emitted order
+        (``device_host_s``), the kernel wall time is reported separately
+        (``device_kernel_s``; on a CPU CI worker that is interpret-mode
+        emulation, a gross upper bound on real-accelerator time).
+
+    The ISSUE-4 acceptance gate is ``host_prepass_reduced``: the
+    host-side scheduling work per image must be strictly smaller with
+    ``schedule_backend="device"``. Also reports the end-to-end executor
+    prepass + ``host_overlap_frac`` shift for both backends.
+    """
+    params, x = executor_case(h, w, c, c_out, seed)
+    n = int(x.shape[0])
+    offsets = conv2d(x, params.w_off, params.b_off)
+    coords = offsets_to_coords(offsets.astype(jnp.float32), 3, "dcn2")
+    grid = TileGrid(h, w, tile, tile)
+    m = buffer_tiles
+    interp = resolve_interpret(None)
+
+    def host_build(i):
+        B = np.asarray(tdt_from_coords(coords[i], grid, grid))
+        return schedule_tiles(B, m)
+
+    def device_kernels(i):
+        B = tdt_from_coords_device(coords[i], grid, grid, interpret=interp)
+        o, k, v = greedy_schedule_arrays(B, m, interpret=interp)
+        return np.asarray(o), np.asarray(k), np.asarray(v)
+
+    def best(fn):
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times) / n
+
+    host_scheds = [host_build(i) for i in range(n)]     # also warms jit
+    arrays = [device_kernels(i) for i in range(n)]
+    dev_scheds = [assemble_device_schedule(*a) for a in arrays]
+    match = all(hs == ds for hs, ds in zip(host_scheds, dev_scheds))
+
+    host_s = best(lambda: [host_build(i) for i in range(n)])
+    dev_kernel_s = best(lambda: [device_kernels(i) for i in range(n)])
+    dev_host_s = best(
+        lambda: [assemble_device_schedule(*a) for a in arrays])
+    reduced = dev_host_s < host_s
+    csv(f"sched_backend,host_sched_s_per_img={host_s:.6f},"
+        f"device_host_s_per_img={dev_host_s:.6f},"
+        f"device_kernel_s_per_img={dev_kernel_s:.6f},"
+        f"interpret={'yes' if interp else 'no'},"
+        f"match={'yes' if match else 'NO'},"
+        f"host_prepass_reduced={'yes' if reduced else 'NO'}")
+
+    for backend in ("host", "device"):
+        cfg = PipelineConfig(tile=tile, buffer_tiles=m,
+                             use_schedule_cache=False,
+                             schedule_backend=backend)
+        dcn_pipeline(x, params, config=cfg)              # warm
+        t0 = time.perf_counter()
+        y, tr = dcn_pipeline(x, params, config=cfg, return_trace=True)
+        jax.block_until_ready(y)
+        wall = time.perf_counter() - t0
+        csv(f"sched_backend_e2e,backend={backend},"
+            f"prepass_s_per_img={tr.overlap.prepass_s / n:.6f},"
+            f"sched_s_per_img={tr.overlap.schedule_s / n:.6f},"
+            f"host_overlap_frac={tr.host_overlap_frac:.3f},"
+            f"schedule_device_frac={tr.schedule_device_frac:.3f},"
+            f"wall_s={wall:.4f}")
+    return dict(host_sched_s_per_img=host_s,
+                device_host_s_per_img=dev_host_s,
+                device_kernel_s_per_img=dev_kernel_s,
+                match=match, host_prepass_reduced=reduced)
+
+
 if __name__ == "__main__":
     run()
     run_executor()
+    run_backends()

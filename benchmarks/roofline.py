@@ -19,10 +19,7 @@ MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/capacity/dispatch waste.
 from __future__ import annotations
 
 import json
-import math
 import os
-
-import jax.numpy as jnp
 
 from repro import configs
 from repro.models import lm

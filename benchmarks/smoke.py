@@ -9,9 +9,18 @@ one JSON file per benchmark so the CI can archive the perf trajectory:
 Each file carries the emitted csv lines verbatim plus parsed key=value
 fields, so downstream tooling can diff runs without re-parsing logs.
 BENCH_graph.json additionally carries top-level ``dispatch_count`` /
-``per_tile_dispatch_count`` / ``host_overlap_frac`` fields, and the run
-exits nonzero (failing the CI bench-smoke job) if the batched dispatch
-count regresses to or above the per-tile baseline.
+``per_tile_dispatch_count`` / ``host_overlap_frac`` fields, and
+BENCH_scheduling.json carries the host-vs-device scheduling-backend
+numbers (``sched_host_s_per_img`` etc.). The run exits nonzero (failing
+the CI bench-smoke job) if:
+
+  * the batched dispatch count regresses to or above the per-tile
+    baseline (ISSUE 3 gate);
+  * the device scheduling backend is not bit-exact vs the host, or does
+    not strictly reduce host scheduling time per image (ISSUE 4 gate);
+  * ``--compare BASELINE_DIR`` is given (previous main-branch
+    ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or the
+    dispatch count regress more than 10% against the baseline.
 """
 
 from __future__ import annotations
@@ -26,7 +35,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:          # allow `python benchmarks/smoke.py`
     sys.path.insert(0, _ROOT)
 
-from benchmarks import bench_fusion, bench_graph, bench_scheduling  # noqa: E402
+from benchmarks import bench_fusion, bench_graph, bench_scheduling
 
 TINY_TDT = dict(h=16, w=16, c=16, tiles_per_side=4)
 
@@ -55,9 +64,60 @@ def _collect(name: str, steps) -> dict:
     }
 
 
+def _record(payload: dict, label: str) -> dict | None:
+    return next((r for r in payload["records"] if r["label"] == label),
+                None)
+
+
+def _compare_baseline(baseline_dir: str, suites: dict) -> int:
+    """CI bench-regression gate: scheduled DRAM tile loads and the
+    batched dispatch count must stay within 10% of the previous
+    main-branch artifacts. A missing baseline (first run, expired
+    artifact) is a warning, not a failure."""
+    rc = 0
+    checks = [
+        ("BENCH_scheduling.json", "scheduled DRAM tile loads",
+         lambda p: int(_record(p, "fig16_layer")["scheduled_loads"])),
+        ("BENCH_graph.json", "batched dispatch count",
+         lambda p: int(p["dispatch_count"])),
+    ]
+    for fname, what, extract in checks:
+        path = os.path.join(baseline_dir, fname)
+        if not os.path.exists(path):
+            print(f"WARNING: no baseline {path}; skipping {what} check")
+            continue
+        try:
+            with open(path) as f:
+                base = extract(json.load(f))
+        except (KeyError, TypeError, ValueError) as e:
+            print(f"WARNING: unreadable baseline {path} ({e}); skipping")
+            continue
+        try:
+            new = extract(suites[fname])
+        except (KeyError, TypeError, ValueError) as e:
+            # Current payload incomplete (e.g. an earlier gate already
+            # flagged a missing record): fail the gate, keep going so
+            # the artifacts still get written.
+            print(f"ERROR: current {fname} missing comparison field "
+                  f"({e})")
+            rc = 1
+            continue
+        limit = base * 1.10
+        verdict = "REGRESSED" if new > limit else "ok"
+        print(f"bench-regression: {what} new={new} baseline={base} "
+              f"(limit {limit:.1f}) -> {verdict}")
+        if new > limit:
+            rc = 1
+    return rc
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=".", help="output directory")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_DIR",
+                    help="directory of previous-main BENCH_*.json "
+                         "artifacts; fail on >10%% regression of "
+                         "scheduled loads / dispatch count")
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
 
@@ -67,6 +127,9 @@ def main(argv=None) -> int:
                                         c_out=16, buffer_bytes=4096)),
             (bench_scheduling.run_executor, dict(h=16, w=16, c=8, c_out=8,
                                                  tile=8, buffer_tiles=2)),
+            (bench_scheduling.run_backends, dict(h=16, w=16, c=8, c_out=8,
+                                                 tile=8, buffer_tiles=2,
+                                                 repeats=3)),
         ]),
         "BENCH_fusion.json": _collect("fusion", [
             (bench_fusion.run, dict(tdt_kwargs=TINY_TDT, channels=16,
@@ -109,6 +172,35 @@ def main(argv=None) -> int:
         if bench["dispatches_le_segments"] != "yes":
             print("ERROR: batched dispatches exceed layer-segment bound")
             rc = 1
+
+    # Scheduling-backend gate (ISSUE 4 acceptance): the device scheduler
+    # must be bit-exact vs the host and strictly reduce the host-side
+    # scheduling time per image.
+    sched_payload = suites["BENCH_scheduling.json"]
+    backend = _record(sched_payload, "sched_backend")
+    if backend is None:
+        print("ERROR: sched_backend record missing from bench_scheduling")
+        rc = 1
+    else:
+        sched_payload["sched_host_s_per_img"] = float(
+            backend["host_sched_s_per_img"])
+        sched_payload["sched_device_host_s_per_img"] = float(
+            backend["device_host_s_per_img"])
+        sched_payload["sched_device_kernel_s_per_img"] = float(
+            backend["device_kernel_s_per_img"])
+        sched_payload["sched_backend_match"] = backend["match"]
+        sched_payload["sched_host_prepass_reduced"] = (
+            backend["host_prepass_reduced"])
+        if backend["match"] != "yes":
+            print("ERROR: device schedule backend is not bit-exact vs host")
+            rc = 1
+        if backend["host_prepass_reduced"] != "yes":
+            print("ERROR: schedule_backend='device' did not reduce host "
+                  "scheduling time per image")
+            rc = 1
+
+    if args.compare:
+        rc = max(rc, _compare_baseline(args.compare, suites))
 
     meta = {"python": platform.python_version(),
             "platform": platform.platform()}

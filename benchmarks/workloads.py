@@ -18,10 +18,10 @@ import numpy as np
 
 from repro.core.deform import (conv2d, init_deformable_conv,
                                offsets_to_coords, randomize_offset_conv)
-from repro.core.tiles import (TileGrid, make_square_grid,
-                              per_pixel_input_tiles, tdt_from_coords)
+from repro.core.tiles import (make_square_grid, per_pixel_input_tiles,
+                              tdt_from_coords)
 from repro.data import DataConfig, image_batch
-from repro.models.dcn_models import DcnNetConfig, layer_shapes
+from repro.models.dcn_models import DcnNetConfig
 
 NETWORKS = [("vgg19", 3), ("vgg19", 8), ("vgg19", -1),
             ("segnet", 3), ("segnet", 8), ("segnet", -1)]

@@ -81,9 +81,9 @@ def main():
             print(f"  fused group ({g_f.n_layers} layers): "
                   f"{g_f.total_dram_bytes} B fused vs "
                   f"{g_u.total_dram_bytes} B per-layer")
+    saved = 100 * (1 - fused.total_dram_bytes / unfused.total_dram_bytes)
     print(f"network DRAM: fused={fused.total_dram_bytes} B, "
-          f"per-layer={unfused.total_dram_bytes} B "
-          f"({100 * (1 - fused.total_dram_bytes / unfused.total_dram_bytes):.1f}% saved)")
+          f"per-layer={unfused.total_dram_bytes} B ({saved:.1f}% saved)")
 
 
 if __name__ == "__main__":

@@ -59,7 +59,8 @@ def input_specs(cfg: ModelConfig, shape: ShapeCell,
     b, s = shape.global_batch, shape.seq
     i32 = jnp.int32
     if shape.kind == "train":
-        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s + 1), i32)}
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s + 1),
+                                                i32)}
         if cfg.d_cross:
             specs["cross_states"] = jax.ShapeDtypeStruct(
                 (b, cfg.n_cross_tokens, cfg.d_cross), jnp.bfloat16)

@@ -29,7 +29,9 @@ from repro.core.fusion import (
 from repro.core.scheduler import (
     FifoBuffer,
     TileSchedule,
+    assemble_device_schedule,
     schedule_tiles,
+    schedule_tiles_device,
     sequential_schedule,
 )
 from repro.core.simulator import (

@@ -89,7 +89,8 @@ def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
         window_strides=(stride, stride),
         padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        preferred_element_type=jnp.float32 if x.dtype == jnp.bfloat16 else None,
+        preferred_element_type=(jnp.float32 if x.dtype == jnp.bfloat16
+                                else None),
     )
     if b is not None:
         y = y + b.astype(y.dtype)
@@ -233,11 +234,13 @@ def fused_deformable_conv2d(
     explicitly in VMEM for the forward pass.
     """
 
-    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
     def stage23(x, params):
         offsets = conv2d(x, params.w_off, params.b_off)
         coords = offsets_to_coords(
-            offsets.astype(jnp.float32), kernel_size, variant, max_displacement)
+            offsets.astype(jnp.float32), kernel_size, variant,
+            max_displacement)
         deformed = bilinear_sample(x, coords)
         kk2 = kernel_size * kernel_size
         w = params.w.reshape(kk2, x.shape[-1], params.w.shape[-1])

@@ -16,9 +16,14 @@ Faithful implementation of the paper's bit-vector-based tile scheduling:
     strategy is used for the input tile replacement for efficient hardware
     implementation").
 
-The scheduler is a *host-side* component (numpy): on the paper's ASIC it is
-a dedicated hardware block that runs concurrently with the PE array
-("pre-scheduling"); on TPU the same role is played ahead-of-time — the
+Two backends. The default host backend is a numpy reference of the
+paper's dedicated hardware block ("pre-scheduling" runs concurrently
+with the PE array); ``backend="device"`` runs the same greedy selection
+as a Pallas kernel (``kernels.dcn_schedule.greedy_schedule_arrays``) —
+the step loop becomes the kernel grid, the resident-set bitmask lives in
+VMEM, and the host only reassembles the emitted order — matching the
+paper's on-chip scheduler architecture. Both backends are bit-exact:
+they produce byte-identical ``TileSchedule``s on every input. On TPU the
 schedule orders the Pallas grid / DMA sequence (see DESIGN.md §2).
 
 The module also provides the two ablation baselines of paper Fig. 14-16:
@@ -52,7 +57,8 @@ class TileSchedule:
     oid: list[int]
     iid: list[list[int]]
     # Diagnostics filled by the scheduler:
-    reuse_overlap: list[int] = field(default_factory=list)  # |B[curr] & B[next]|
+    # Per transition: |B[curr] & B[next]|
+    reuse_overlap: list[int] = field(default_factory=list)
 
     def dense(self, k_pad: int | None = None
               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -142,16 +148,26 @@ def input_tile_scheduling(B: np.ndarray, curr_id: int, next_id: int,
     return _ids_of(loaded_vec) + _ids_of(seq_load_vec) + _ids_of(last_load_vec)
 
 
-def schedule_tiles(B: np.ndarray, buffer_tiles: int) -> TileSchedule:
+def schedule_tiles(B, buffer_tiles: int, backend: str = "host",
+                   *, interpret: bool | None = None) -> TileSchedule:
     """Full Algorithm 1: bit-vector based tile scheduling.
 
-    B: (n_out, n_in) bool tile-dependency table (TDT).
+    B: (n_out, n_in) bool tile-dependency table (TDT). May be a device
+       array (it stays on-device for ``backend="device"``).
     buffer_tiles: M, on-chip input-buffer capacity in tiles.
+    backend: "host" — the numpy reference loop below; "device" — the
+       Pallas greedy-selection kernel (bit-exact with the host loop; see
+       :func:`schedule_tiles_device`). ``interpret`` only applies to the
+       device backend (None = auto: interpret off-accelerator).
 
     Returns the output-tile execution order and the per-tile input-load
     order. The on-chip occupancy OC used for the priority classes is
     maintained with the same FIFO model the execution will use.
     """
+    if backend == "device":
+        return schedule_tiles_device(B, buffer_tiles, interpret=interpret)
+    if backend != "host":
+        raise ValueError(f"unknown schedule backend: {backend!r}")
     B = np.asarray(B, dtype=bool)
     n_out, n_in = B.shape
     os_mask = B.any(axis=1)  # output tiles that actually need inputs
@@ -179,6 +195,59 @@ def schedule_tiles(B: np.ndarray, buffer_tiles: int) -> TileSchedule:
         os_mask[nxt] = False
 
     return TileSchedule(oid=oid, iid=iid, reuse_overlap=overlaps)
+
+
+def assemble_device_schedule(oid_seq: np.ndarray, klass: np.ndarray,
+                             overlap: np.ndarray) -> TileSchedule:
+    """Assemble a ``TileSchedule`` from the device greedy kernel's dense
+    outputs (``kernels.dcn_schedule.greedy_schedule_arrays``).
+
+    oid_seq: (n_out,) or (n_out, 1) int32 — scheduled tile per step, -1
+             once every dependent tile is done (a contiguous suffix).
+    klass:   (n_out, n_in) int32 — per-step input priority class
+             (0 loadedVec / 1 seqLoadVec / 2 lastLoadVec / 3 non-dep);
+             the load order is ids(0) asc ++ ids(1) asc ++ ids(2) asc,
+             exactly ``input_tile_scheduling``'s three classes.
+    overlap: (n_out,) or (n_out, 1) int32 — per-step reuse overlap.
+
+    This residual host work is O(total deps) bookkeeping — the O(T^2 *
+    n_in) selection ran on-device.
+    """
+    oid_seq = np.asarray(oid_seq).reshape(-1)
+    klass = np.asarray(klass)
+    overlap = np.asarray(overlap).reshape(-1)
+    n_sched = int((oid_seq >= 0).sum())
+    iid = []
+    for t in range(n_sched):
+        row = klass[t]
+        iid.append(np.flatnonzero(row == 0).tolist()
+                   + np.flatnonzero(row == 1).tolist()
+                   + np.flatnonzero(row == 2).tolist())
+    return TileSchedule(oid=oid_seq[:n_sched].tolist(), iid=iid,
+                        reuse_overlap=overlap[1:n_sched].tolist())
+
+
+def schedule_tiles_device(B, buffer_tiles: int,
+                          *, interpret: bool | None = None) -> TileSchedule:
+    """Algorithm 1 via the on-device greedy selection kernel.
+
+    Bit-exact vs the host ``schedule_tiles`` loop on every TDT: same
+    first-tile choice, same first-max tie-breaks, same three input
+    priority classes under the same FIFO residency model (the kernel
+    tracks it as per-tile load sequence numbers in VMEM).
+    """
+    # Imported lazily: the numpy host path must stay importable without
+    # pulling the Pallas toolchain in.
+    import jax
+
+    from repro.kernels.dcn_schedule import greedy_schedule_arrays
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    oid_seq, klass, ovl = greedy_schedule_arrays(
+        jax.numpy.asarray(B), int(buffer_tiles), interpret=bool(interpret))
+    return assemble_device_schedule(np.asarray(oid_seq), np.asarray(klass),
+                                    np.asarray(ovl))
 
 
 def sequential_schedule(B: np.ndarray) -> TileSchedule:

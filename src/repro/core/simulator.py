@@ -29,7 +29,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .scheduler import FifoBuffer, TileSchedule, schedule_tiles, sequential_schedule
+from .scheduler import (FifoBuffer, TileSchedule, schedule_tiles,
+                        sequential_schedule)
 from .tiles import TileGrid, compose_tdt_chain
 
 # ---------------------------------------------------------------------------
@@ -53,8 +54,10 @@ _DDR_BW_BYTES_PER_S = 12.8e9
 class DramEnergyModel:
     """Per-byte dynamic energies (pJ/B) + background power (W)."""
 
-    read_pj_per_byte: float = (P_ACT_MW + P_RD_MW + P_READ_IO_MW) / 1e3 / _DDR_BW_BYTES_PER_S * 1e12
-    write_pj_per_byte: float = (P_ACT_MW + P_WR_MW + P_WRITE_ODT_MW) / 1e3 / _DDR_BW_BYTES_PER_S * 1e12
+    read_pj_per_byte: float = ((P_ACT_MW + P_RD_MW + P_READ_IO_MW)
+                               / 1e3 / _DDR_BW_BYTES_PER_S * 1e12)
+    write_pj_per_byte: float = ((P_ACT_MW + P_WR_MW + P_WRITE_ODT_MW)
+                                / 1e3 / _DDR_BW_BYTES_PER_S * 1e12)
     background_w: float = P_BG_MW / 1e3
 
     def energy_j(self, read_bytes: float, write_bytes: float,
@@ -93,7 +96,8 @@ def _replay(schedule: TileSchedule, buffer_tiles: int) -> FifoBuffer:
     return buf
 
 
-def simulate_naive(per_pixel_tiles: np.ndarray, buffer_tiles: int) -> FifoBuffer:
+def simulate_naive(per_pixel_tiles: np.ndarray,
+                   buffer_tiles: int) -> FifoBuffer:
     """'W/O bit vector': output features execute in raster order and demand
     their input tiles one by one — no output-tile-level dedup is possible
     because the overall dependency information is unknown.
@@ -197,7 +201,8 @@ class NetworkTrafficReport:
 
     @property
     def total_dram_bytes(self) -> int:
-        return sum(g.total_dram_bytes for g in self.groups) + self.boundary_bytes
+        return (sum(g.total_dram_bytes for g in self.groups)
+                + self.boundary_bytes)
 
 
 def _schedule_and_replay(B: np.ndarray, buffer_tiles: int,
@@ -237,7 +242,8 @@ def simulate_group(
         comp = compose_tdt_chain(b_layers)
         buf = _schedule_and_replay(comp, buffer_tiles, schedule)
         loads, hits = buf.loads, buf.hits
-        input_bytes = loads * grid.tile_bytes(layer_channels[0][0], dtype_bytes)
+        input_bytes = loads * grid.tile_bytes(layer_channels[0][0],
+                                              dtype_bytes)
         inter_bytes = 0
     else:
         loads = hits = input_bytes = 0

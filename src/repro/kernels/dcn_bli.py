@@ -53,7 +53,8 @@ def _bli_kernel(idx_ref, coeff_ref, x_ref, o_ref, *, s_pixels: int):
     ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_p", "block_c", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_p", "block_c", "interpret"))
 def bli_tile_matmul(
     x_tile: jax.Array,       # (S, C) flattened halo tile
     idx: jax.Array,          # (P, 4) int32 flat neighbour indices
@@ -69,7 +70,8 @@ def bli_tile_matmul(
     bp = min(block_p, p)
     bc = min(block_c, c)
     if p % bp or c % bc:
-        raise ValueError(f"P={p} and C={c} must tile by ({bp},{bc}); pad upstream")
+        raise ValueError(
+            f"P={p} and C={c} must tile by ({bp},{bc}); pad upstream")
 
     return pl.pallas_call(
         functools.partial(_bli_kernel, s_pixels=s),
@@ -91,7 +93,8 @@ def bli_tile_matmul(
 # the matmul variant above is the production path (see EXPERIMENTS.md).
 # ---------------------------------------------------------------------------
 
-def parity_planes(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+def parity_planes(x: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Split (H, W, C) into 4 parity planes (the paper's 4 buffer banks).
 
     Plane (pr, pc) holds x[pr::2, pc::2]. The four BLI neighbours of any

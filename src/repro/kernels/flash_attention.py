@@ -47,7 +47,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     qi = (pl.program_id(1) * bq
           + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-          + (skv - sq))                                  # absolute key-time of q
+          + (skv - sq))                        # absolute key-time of q
     ki = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     mask = ki < skv                                      # kv padding
     if causal:

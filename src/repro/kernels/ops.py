@@ -25,7 +25,7 @@ def round_up(x: int, m: int) -> int:
 
 
 def coords_to_idx_coeff(coords: jax.Array, h: int, w: int):
-    """(..., 2) float coords -> flat 4-neighbour idx (..., 4) + coeffs (..., 4).
+    """(..., 2) float coords -> flat 4-neighbour idx + coeffs (..., 4).
 
     Neighbour order (r0,c0) (r0,c1) (r1,c0) (r1,c1) matches Eq. 5
     (eta, theta, mu, gamma) as produced by ``bli_coefficients``.
@@ -94,7 +94,7 @@ def deformable_conv2d_pallas(
     offsets = conv2d(x, params.w_off, params.b_off)                  # Eq. 1
     coords = offsets_to_coords(offsets.astype(jnp.float32),
                                kernel_size, variant, max_displacement)
-    idx, coeff = coords_to_idx_coeff(coords, h, w)                   # (N,H,W,KK,4)
+    idx, coeff = coords_to_idx_coeff(coords, h, w)       # (N,H,W,KK,4)
 
     p = h * w
     p_pad = round_up(p, 128)
@@ -110,5 +110,5 @@ def deformable_conv2d_pallas(
     fn = functools.partial(dcn_fused_tile, kernel_size=kernel_size,
                            interpret=interpret)
     out = jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
-        x_flat, idx_f, coeff_f, w2, params.b)                        # (N,P_pad,O)
+        x_flat, idx_f, coeff_f, w2, params.b)            # (N,P_pad,O)
     return out[:, :p].reshape(n, h, w, o)

@@ -22,7 +22,6 @@ import sys
 import time
 import traceback
 
-import jax
 import jax.numpy as jnp
 
 from repro import configs
@@ -191,7 +190,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             lower_s=round(t_lower, 1),
             compile_s=round(t_compile, 1),
             memory={
-                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "argument_bytes": int(
+                    getattr(mem, "argument_size_in_bytes", 0)),
                 "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
                 "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
                 "generated_code_bytes": int(

@@ -231,7 +231,8 @@ def _parse_computations(text: str) -> dict[str, Computation]:
                     dims = _type_dims(lhs_type)
                     if dims:
                         shape = dims[0][1]
-                        for ci in (int(c) for c in ml.group(1).split(",") if c):
+                        for ci in (int(c)
+                                   for c in ml.group(1).split(",") if c):
                             if ci < len(shape):
                                 k *= shape[ci]
             rec.flops = 2.0 * out_elems * k

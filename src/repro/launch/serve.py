@@ -10,7 +10,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch.mesh import make_host_mesh

@@ -19,8 +19,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import base as cfgbase
 from repro.models import lm
-from repro.models.params import (LogicalAxes, abstract_params, param_axes,
-                                 tree_specs)
+from repro.models.params import abstract_params, param_axes, tree_specs
 from repro.models.transformer import ModelConfig
 from repro.optim import AdamWConfig, abstract_opt_state, adamw_update
 from repro.launch.sharding import sharding_rules

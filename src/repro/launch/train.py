@@ -12,12 +12,10 @@ and watches for stragglers (launch.elastic).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt
 from repro import configs

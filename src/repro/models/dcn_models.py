@@ -30,8 +30,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.deform import (DeformableConvParams, conv2d,
-                               deformable_conv2d, fused_deformable_conv2d,
+from repro.core.deform import (conv2d, deformable_conv2d,
+                               fused_deformable_conv2d,
                                init_deformable_conv)
 from repro.core.fusion import LayerShape
 from repro.kernels.ops import deformable_conv2d_pallas

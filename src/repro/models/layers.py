@@ -17,8 +17,6 @@ three entry points:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -135,8 +133,10 @@ def init_attention(mk: Maker, cfg: AttnConfig):
     d_kv_in = cfg.d_cross if (cfg.cross and cfg.d_cross) else d
     p = {
         "wq": mk((d, hq, hd), ("embed", "heads", "head_dim"), init="fan_in"),
-        "wk": mk((d_kv_in, hkv, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
-        "wv": mk((d_kv_in, hkv, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "wk": mk((d_kv_in, hkv, hd), ("embed", "kv_heads", "head_dim"),
+                 init="fan_in"),
+        "wv": mk((d_kv_in, hkv, hd), ("embed", "kv_heads", "head_dim"),
+                 init="fan_in"),
         "wo": mk((hq, hd, d), ("heads", "head_dim", "embed"), init="fan_in"),
     }
     if cfg.qk_norm:
@@ -303,7 +303,8 @@ def attention_decode(p, cfg: AttnConfig, x, cache, pos):
             q = rmsnorm(p["q_norm"], q)
         out = _sdpa(q, cache["k"].astype(x.dtype), cache["v"].astype(x.dtype),
                     cfg, causal=False, q_offset=pos)
-        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype)), cache
+        return (jnp.einsum("bshk,hkd->bsd", out,
+                           p["wo"].astype(out.dtype)), cache)
 
     q, k_new, v_new = _qkv(p, cfg, x, x, positions)
     k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
@@ -357,7 +358,8 @@ def init_mla(mk: Maker, cfg: MlaConfig):
 
 def _mla_qkr(p, cfg: MlaConfig, x, positions):
     """Queries + latent + rope-key shared by train/decode."""
-    q_a = rmsnorm(p["q_a_norm"], jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)))
+    q_a = rmsnorm(p["q_a_norm"],
+                  jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)))
     q = jnp.einsum("bsr,rhk->bshk", q_a, p["wq_b"].astype(x.dtype))
     q_nope, q_rope = q[..., :cfg.d_nope], q[..., cfg.d_nope:]
     q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)

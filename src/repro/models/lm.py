@@ -23,9 +23,8 @@ import jax.numpy as jnp
 from repro.models.layers import make_norm
 from repro.models.params import Maker
 from repro.models.transformer import (ModelConfig, apply_layers_decode,
-                                      apply_layers_train, block_decode,
-                                      block_train, init_block,
-                                      init_block_cache, init_layer_caches,
+                                      apply_layers_train, block_train,
+                                      init_block, init_layer_caches,
                                       init_layers)
 
 

@@ -66,9 +66,11 @@ def init_moe(mk: Maker, cfg: MoeConfig):
     d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts_padded
     p = {
         "router": mk((d, e), ("embed", None), init="fan_in"),
-        "w_gate": mk((e, d, f), ("expert", "embed_fsdp", "mlp"), init="fan_in"),
+        "w_gate": mk((e, d, f), ("expert", "embed_fsdp", "mlp"),
+                     init="fan_in"),
         "w_up": mk((e, d, f), ("expert", "embed_fsdp", "mlp"), init="fan_in"),
-        "w_down": mk((e, f, d), ("expert", "mlp_fsdp", "embed"), init="fan_in"),
+        "w_down": mk((e, f, d), ("expert", "mlp_fsdp", "embed"),
+                     init="fan_in"),
     }
     if cfg.router == "sigmoid":
         p["e_bias"] = mk((e,), (None,), init="zeros")  # aux-loss-free bias
@@ -250,8 +252,10 @@ def moe_apply(p, cfg: MoeConfig, x, *, mesh: jax.sharding.Mesh | None = None,
                 dataclasses.replace(cfg, n_shared=0), x_loc,
                 rank=rank, wgather=wgather, psum=lambda y: y)
             sh = p_loc["shared"]
-            g = jnp.einsum("bsd,df->bsf", x_loc, sh["w_gate"].astype(x_loc.dtype))
-            u = jnp.einsum("bsd,df->bsf", x_loc, sh["w_up"].astype(x_loc.dtype))
+            g = jnp.einsum("bsd,df->bsf", x_loc,
+                           sh["w_gate"].astype(x_loc.dtype))
+            u = jnp.einsum("bsd,df->bsf", x_loc,
+                           sh["w_up"].astype(x_loc.dtype))
             shared = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
                                 sh["w_down"].astype(x_loc.dtype)) \
                 .astype(jnp.float32)

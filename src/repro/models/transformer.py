@@ -190,9 +190,11 @@ def block_decode(p, cfg: ModelConfig, spec: BlockSpec, x, cache, pos, ctx):
     elif spec.kind == "mamba":
         y, new_mix = ssm.mamba_decode(p["mix"], cfg.mamba, h, cache["mix"])
     elif spec.kind == "mlstm":
-        y, new_mix = xlstm.mlstm_decode(p["mix"], cfg.xlstm_cfg, h, cache["mix"])
+        y, new_mix = xlstm.mlstm_decode(p["mix"], cfg.xlstm_cfg, h,
+                                        cache["mix"])
     elif spec.kind == "slstm":
-        y, new_mix = xlstm.slstm_decode(p["mix"], cfg.xlstm_cfg, h, cache["mix"])
+        y, new_mix = xlstm.slstm_decode(p["mix"], cfg.xlstm_cfg, h,
+                                        cache["mix"])
     else:
         raise ValueError(spec.kind)
     if cfg.sandwich_norm:
@@ -218,7 +220,8 @@ def init_block_cache(mk_or_none, cfg: ModelConfig, spec: BlockSpec,
     if spec.kind == "attn":
         if spec.cross:
             n = max(cfg.n_cross_tokens, 1)
-            mix = init_kv_cache(mk_or_none, cfg.attn_cfg(spec), batch, n, dtype)
+            mix = init_kv_cache(mk_or_none, cfg.attn_cfg(spec), batch, n,
+                                dtype)
         else:
             mix = init_kv_cache(mk_or_none, cfg.attn_cfg(spec), batch,
                                 max_len, dtype)
@@ -254,10 +257,12 @@ def init_layers(mk: Maker, cfg: ModelConfig):
 
 def _remat(cfg: ModelConfig, fn):
     if cfg.remat == "full":
-        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
     if cfg.remat == "dots":
         return jax.checkpoint(
-            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
     return fn
 
 
@@ -314,11 +319,13 @@ def apply_layers_decode(p, cfg: ModelConfig, x, cache, pos, ctx):
             return x, new_c
 
         if cfg.scan_layers:
-            x, stack_cache = jax.lax.scan(body, x, (p["stack"], cache["stack"]))
+            x, stack_cache = jax.lax.scan(body, x,
+                                          (p["stack"], cache["stack"]))
         else:
             outs = []
             for r in range(cfg.n_repeats):
-                layer = jax.tree.map(lambda t: t[r], (p["stack"], cache["stack"]))
+                layer = jax.tree.map(lambda t: t[r],
+                                     (p["stack"], cache["stack"]))
                 x, c = body(x, layer)
                 outs.append(c)
             stack_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)

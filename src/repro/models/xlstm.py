@@ -159,7 +159,8 @@ def mlstm_train(p, cfg: XlstmConfig, x):
 def init_mlstm_cache(mk_or_none, cfg: XlstmConfig, batch: int):
     h, dh = cfg.n_heads, cfg.d_head
     if mk_or_none is not None:
-        return {"c": mk_or_none((batch, h, dh, dh), ("batch", "heads", None, None)),
+        return {"c": mk_or_none((batch, h, dh, dh),
+                                ("batch", "heads", None, None)),
                 "n": mk_or_none((batch, h, dh), ("batch", "heads", None)),
                 "m": mk_or_none((batch, h), ("batch", "heads"))}
     return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),

@@ -51,7 +51,8 @@ def compressed_psum_tree(grads, err, axis_names):
         # int8 payload on the wire; accumulate in int32 to avoid overflow.
         summed = jax.lax.psum(q.astype(jnp.int32), axis_names)
         n = 1
-        for a in (axis_names if isinstance(axis_names, tuple) else (axis_names,)):
+        for a in (axis_names if isinstance(axis_names, tuple)
+                  else (axis_names,)):
             n *= jax.lax.axis_size(a)
         decoded = summed.astype(jnp.float32) * scale / n
         new_err = gf - dequantize(q, scale)

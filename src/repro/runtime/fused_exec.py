@@ -46,6 +46,7 @@ tests/test_batched_dispatch.py pin the numerics vs the XLA reference.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -58,6 +59,7 @@ from repro.core.scheduler import (TileSchedule, pow2_pad, schedule_tiles,
 from repro.core.tiles import (TileGrid, compose_tdt_chain, tdt_from_coords,
                               tdt_standard_conv)
 from repro.kernels.dcn_fused import dcn_fused_schedule, dcn_fused_tile
+from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.kernels.ops import round_up
 from repro.runtime.cache import (ScheduleCache, chain_digest, conv_digest,
                                  coords_digest, default_schedule_cache)
@@ -67,8 +69,8 @@ from repro.runtime.graph import (DeformNode, FusedGroup, NetGraph, PoolNode,
 from repro.runtime.packing import (build_neighbour_tables, pack_output_tile,
                                    pack_schedule_tiles, plane_to_tiles,
                                    tiles_to_plane)
-from repro.runtime.pipeline import (clamp_tile_config, resolve_interpret,
-                                    run_staged, validate_dispatch_config)
+from repro.runtime.pipeline import (resolve_interpret, run_staged,
+                                    validate_dispatch_config)
 from repro.runtime.trace import (GroupTrace, LayerBufferStats, NetworkTrace,
                                  TileRecord)
 
@@ -94,6 +96,10 @@ class GraphConfig:
     # "batched": one pallas_call grid per (group, layer segment).
     # "per_tile": PR 2 demand-driven per-tile dispatch loop.
     dispatch: str = "batched"
+    # "host": TDT scatter + Algorithm-1 loop in host numpy/Python.
+    # "device": both as Pallas kernels (kernels.dcn_schedule), bit-exact
+    # vs the host path — the staging thread shrinks to packing only.
+    schedule_backend: str = "host"
     # Images staged ahead of execution: 1 = serial, 2 = prepass image i+1
     # on a worker thread while image i executes (the default), >2 queues
     # deeper (rarely helps: prepass is single-threaded host work).
@@ -250,6 +256,10 @@ class _GroupArtifacts:
     nbs: list                             # per-layer NeighbourTables | None
     sched: TileSchedule                   # composite Algorithm-1 schedule
     cache_hit: bool | None
+    # TDT + schedule build wall time inside the prepass, and the portion
+    # that ran through the device scheduling backend.
+    schedule_s: float = 0.0
+    schedule_device_s: float = 0.0
     # Batched dispatch only: per-layer packed operands (None entries for
     # conv layers). Packed on the staging thread so the per-image packing
     # cost overlaps the previous image's execution.
@@ -266,6 +276,7 @@ def _group_schedule_artifacts(
     max_displacement: float | None,
     cache: ScheduleCache | None,
     need_out_plane: bool,
+    interp: bool = False,
 ) -> tuple[_GroupArtifacts, jax.Array]:
     """Prepass for one group: per-layer TDTs + neighbour tables +
     composite schedule, plus the group's dense output plane when
@@ -305,29 +316,43 @@ def _group_schedule_artifacts(
             plane = apply_layer_dense(plane, node, p, max_displacement)
 
     def build():
+        device = cfg.schedule_backend == "device"
         b_layers = []
         for node, coords in zip(group.nodes, dcn_coords):
             if coords is None:
+                # Standard-conv halos are static per grid — no offsets
+                # to decode, so the analytic host table stays.
                 b_layers.append(tdt_standard_conv(grid, grid,
                                                   node.kernel_size))
+            elif device:
+                b_layers.append(np.asarray(tdt_from_coords_device(
+                    coords, grid, grid, interpret=interp)))
             else:
                 b_layers.append(np.asarray(tdt_from_coords(coords, grid,
                                                            grid)))
         comp = compose_tdt_chain(b_layers)
         if cfg.schedule == "alg1":
-            sched = schedule_tiles(comp, m)
+            sched = schedule_tiles(comp, m,
+                                   backend=cfg.schedule_backend,
+                                   interpret=interp)
         elif cfg.schedule == "sequential":
             sched = sequential_schedule(comp)
         else:
             raise ValueError(f"unknown schedule: {cfg.schedule!r}")
         return b_layers, sched
 
+    t0 = time.perf_counter()
     if cache is None:
         b_layers, sched = build()
         hit = None
     else:
-        key = (chain_digest(digests, grid), m, cfg.schedule)
+        # Tile dims are hashed into every digest via the grid, but stay
+        # an explicit key component too: same coords under a different
+        # (tile_h, tile_w) must never collide.
+        key = (chain_digest(digests, grid), grid.th, grid.tw, m,
+               cfg.schedule)
         (b_layers, sched), hit = cache.get_or_build(key, build)
+    schedule_s = time.perf_counter() - t0
 
     # Pack the batched-grid operands here, on the staging thread. The
     # schedule cache cannot cover this: idx follows the quantized coords
@@ -356,8 +381,11 @@ def _group_schedule_artifacts(
             packed.append(_LayerDispatch(out_order, dep_tbl, dep_cnt, idx,
                                          coeff))
 
-    art = _GroupArtifacts(grid=grid, m=m, b_layers=list(b_layers), nbs=nbs,
-                          sched=sched, cache_hit=hit, packed=packed)
+    art = _GroupArtifacts(
+        grid=grid, m=m, b_layers=list(b_layers), nbs=nbs, sched=sched,
+        cache_hit=hit, packed=packed, schedule_s=schedule_s,
+        schedule_device_s=(schedule_s
+                           if cfg.schedule_backend == "device" else 0.0))
     return art, plane
 
 
@@ -368,6 +396,7 @@ def _image_prepass(
     cfg: GraphConfig,
     max_displacement: float | None,
     cache: ScheduleCache | None,
+    interp: bool = False,
 ) -> list[_GroupArtifacts | None]:
     """Host-side prepass of one whole image: the dense stage-1 chain runs
     ahead through the segments as far as the last DeformNode's offset
@@ -399,7 +428,7 @@ def _image_prepass(
                  else cfg.buffer_tiles)
             art, plane = _group_schedule_artifacts(
                 plane, seg, convs, grid, m, cfg, max_displacement, cache,
-                need_out_plane=deform_after[s])
+                need_out_plane=deform_after[s], interp=interp)
             arts.append(art)
     return arts
 
@@ -560,6 +589,7 @@ def _run_group(
     trace = GroupTrace(
         grid=grid, tile_bytes=tile_bytes, buffer_tiles=art.m,
         schedule=cfg.schedule, schedule_cache_hit=art.cache_hit,
+        schedule_backend=cfg.schedule_backend,
         dtype_bytes=dtype_bytes, layer_channels=group.layer_channels,
         output_bytes=h * w * group.c_out * dtype_bytes,
         weight_bytes=group_weight_bytes(group, dtype_bytes),
@@ -636,7 +666,7 @@ def run_graph(
 
     def prepass(i: int):
         return _image_prepass(x[i], segments, convs, cfg, max_displacement,
-                              cache)
+                              cache, interp=interpret)
 
     def execute_image(i: int, arts) -> jax.Array:
         plane = x[i]
@@ -651,6 +681,8 @@ def run_graph(
                                        art)
                 gt.image, gt.group = i, g
                 g += 1
+                trace.overlap.schedule_s += art.schedule_s
+                trace.overlap.schedule_device_s += art.schedule_device_s
                 trace.groups.append(gt)
         return plane
 

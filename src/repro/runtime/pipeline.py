@@ -43,6 +43,7 @@ from repro.core.scheduler import (TileSchedule, schedule_tiles,
                                   sequential_schedule)
 from repro.core.tiles import TileGrid, tdt_from_coords
 from repro.kernels.dcn_fused import dcn_fused_schedule, dcn_fused_tile
+from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.kernels.ops import round_up
 from repro.runtime.cache import coords_digest, default_schedule_cache
 from repro.runtime.packing import (NeighbourTables, build_neighbour_tables,
@@ -104,10 +105,13 @@ def run_staged(n: int, prepass, execute, depth: int, overlap) -> list:
 
 def validate_dispatch_config(cfg) -> None:
     """Shared ``__post_init__`` checks of the executor configs: tile
-    sides, dispatch mode and staging depth."""
+    sides, dispatch mode, schedule backend and staging depth."""
     cfg.tile_hw                          # validates tile sides
     if cfg.dispatch not in ("batched", "per_tile"):
         raise ValueError(f"unknown dispatch mode: {cfg.dispatch!r}")
+    if cfg.schedule_backend not in ("host", "device"):
+        raise ValueError(
+            f"unknown schedule backend: {cfg.schedule_backend!r}")
     if cfg.staging_depth < 1:
         raise ValueError(
             f"staging_depth must be >= 1, got {cfg.staging_depth}")
@@ -137,6 +141,11 @@ class PipelineConfig:
     # "batched": the whole schedule as one pallas_call grid.
     # "per_tile": one kernel dispatch per schedule entry (PR 1).
     dispatch: str = "batched"
+    # "host": TDT scatter + Algorithm-1 loop in host numpy/Python.
+    # "device": both run as Pallas kernels (kernels.dcn_schedule) — the
+    # paper's on-chip scheduler block; bit-exact vs the host path, and
+    # the staging thread shrinks to packing only.
+    schedule_backend: str = "host"
     # Images staged ahead: 1 = serial, 2 (default) = prepass image i+1 on
     # a worker thread while image i executes.
     staging_depth: int = 2
@@ -161,6 +170,10 @@ class _ImageArtifacts:
     cache_hit: bool | None
     nb: NeighbourTables
     k_pad: int
+    # TDT + schedule build wall time inside the prepass, and the portion
+    # that ran through the device scheduling backend.
+    schedule_s: float = 0.0
+    schedule_device_s: float = 0.0
     # batched dispatch only: stacked kernel operands for the whole schedule
     dep_tbl: np.ndarray | None = None
     dep_cnt: np.ndarray | None = None
@@ -174,32 +187,49 @@ def _pipeline_prepass(
     m: int,
     p_pad: int,
     cfg: PipelineConfig,
+    interp: bool,
 ) -> _ImageArtifacts:
     """Host-side prepass of one image: TDT -> schedule (cached) ->
-    neighbour tables -> (batched) group-level packed operands."""
+    neighbour tables -> (batched) group-level packed operands. With
+    ``schedule_backend="device"`` the TDT scatter and the Algorithm-1
+    selection run as Pallas kernels and the host only reassembles."""
 
     def build_schedule():
-        B = np.asarray(tdt_from_coords(coords_i, grid, grid))
+        if cfg.schedule_backend == "device":
+            B = tdt_from_coords_device(coords_i, grid, grid,
+                                       interpret=interp)
+        else:
+            B = tdt_from_coords(coords_i, grid, grid)
         if cfg.schedule == "alg1":
-            return schedule_tiles(B, m)
+            return schedule_tiles(B, m, backend=cfg.schedule_backend,
+                                  interpret=interp)
         if cfg.schedule == "sequential":
-            return sequential_schedule(B)
+            return sequential_schedule(np.asarray(B))
         raise ValueError(f"unknown schedule: {cfg.schedule!r}")
 
+    t0 = time.perf_counter()
     if cfg.use_schedule_cache:
-        key = (coords_digest(coords_i, grid), m, cfg.schedule)
+        # Tile dims are hashed inside coords_digest via the grid, but
+        # stay an explicit key component too: two configs sharing coords
+        # must never collide across (tile_h, tile_w).
+        key = (coords_digest(coords_i, grid), grid.th, grid.tw, m,
+               cfg.schedule)
         sched, cache_hit = default_schedule_cache().get_or_build(
             key, build_schedule)
     else:
         sched, cache_hit = build_schedule(), None
+    schedule_s = time.perf_counter() - t0
 
     nb = build_neighbour_tables(coords_i, grid)
     # Uniform packed-buffer size across the image's dispatches (single
     # kernel compilation): dependent-tile count padded to a power of two.
     oid, deps, counts = sched.dense()
     k_pad = deps.shape[1]
-    art = _ImageArtifacts(sched=sched, cache_hit=cache_hit, nb=nb,
-                          k_pad=k_pad)
+    art = _ImageArtifacts(
+        sched=sched, cache_hit=cache_hit, nb=nb, k_pad=k_pad,
+        schedule_s=schedule_s,
+        schedule_device_s=(schedule_s
+                           if cfg.schedule_backend == "device" else 0.0))
     if cfg.dispatch == "batched":
         dep_lists = [d[:c] for d, c in zip(deps, counts)]
         art.dep_tbl, art.dep_cnt, art.idx, art.coeff = pack_schedule_tiles(
@@ -228,7 +258,8 @@ def _pipeline_exec(
     trace = ImageTrace(grid=grid, tile_bytes=tile_bytes, buffer_tiles=m,
                        schedule=cfg.schedule,
                        schedule_cache_hit=art.cache_hit,
-                       dispatch=cfg.dispatch)
+                       dispatch=cfg.dispatch,
+                       schedule_backend=cfg.schedule_backend)
 
     x_tiles = plane_to_tiles(x_i, grid)               # (T, tp, C)
     buffer_bytes = k_pad * tp * c * x_i.dtype.itemsize
@@ -335,11 +366,13 @@ def dcn_pipeline(
     interp = resolve_interpret(cfg.interpret)
 
     def prepass(i: int) -> _ImageArtifacts:
-        return _pipeline_prepass(coords[i], grid, m, p_pad, cfg)
+        return _pipeline_prepass(coords[i], grid, m, p_pad, cfg, interp)
 
     def execute(i: int, art: _ImageArtifacts) -> jax.Array:
         y_i, tr = _pipeline_exec(x[i], art, w2, params.b, kernel_size,
                                  cfg, grid, m, p_pad, interp)
+        trace.overlap.schedule_s += art.schedule_s
+        trace.overlap.schedule_device_s += art.schedule_device_s
         trace.images.append(tr)
         return y_i
 

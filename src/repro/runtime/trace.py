@@ -46,6 +46,9 @@ class ImageTrace:
     # entry; batched grid dispatch pays one per layer segment.
     kernel_dispatches: int = 0
     dispatch: str = "per_tile"   # "per_tile" | "batched"
+    # Which scheduler built this image's TDT + Algorithm-1 order:
+    # "host" = numpy reference loop, "device" = Pallas kernels.
+    schedule_backend: str = "host"
 
     @property
     def packed_tile_loads(self) -> int:
@@ -83,6 +86,13 @@ class OverlapSpans:
 
     prepass_s: float = 0.0       # total host prepass wall time
     prepass_wait_s: float = 0.0  # prepass time the execute loop blocked on
+    # Scheduling-stage split of the prepass: how much of it was the
+    # TDT + Algorithm-1 build, and how much of *that* ran through the
+    # on-device scheduler ("schedule_backend": "device") rather than the
+    # host Python loop. With the device backend the staging thread
+    # shrinks to packing only.
+    schedule_s: float = 0.0          # TDT + schedule build wall time
+    schedule_device_s: float = 0.0   # portion served by the device path
 
     @property
     def host_overlap_frac(self) -> float:
@@ -90,6 +100,13 @@ class OverlapSpans:
         if self.prepass_s <= 0:
             return 0.0
         return max(0.0, 1.0 - self.prepass_wait_s / self.prepass_s)
+
+    @property
+    def schedule_device_frac(self) -> float:
+        """Fraction of schedule-build time on the device backend."""
+        if self.schedule_s <= 0:
+            return 0.0
+        return min(1.0, self.schedule_device_s / self.schedule_s)
 
 
 @dataclass
@@ -110,6 +127,10 @@ class PipelineTrace:
     @property
     def host_overlap_frac(self) -> float:
         return self.overlap.host_overlap_frac
+
+    @property
+    def schedule_device_frac(self) -> float:
+        return self.overlap.schedule_device_frac
 
     @property
     def packed_tile_loads(self) -> int:
@@ -139,7 +160,7 @@ class LayerBufferStats:
     bounded resident footprint and recomputes after eviction."""
 
     kind: str                    # "conv" | "deform"
-    tiles_computed: int = 0      # kernel dispatches (first computes + recomputes)
+    tiles_computed: int = 0      # dispatches (first computes + recomputes)
     recomputes: int = 0          # tiles evicted then produced again
     max_resident_bytes: int = 0  # tile-buffer high-water mark
 
@@ -199,6 +220,10 @@ class NetworkTrace:
     @property
     def host_overlap_frac(self) -> float:
         return self.overlap.host_overlap_frac
+
+    @property
+    def schedule_device_frac(self) -> float:
+        return self.overlap.schedule_device_frac
 
     @property
     def input_load_bytes(self) -> int:

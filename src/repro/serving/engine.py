@@ -23,7 +23,7 @@ cache hit rate and dispatch/overlap counters.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -94,7 +94,8 @@ class DecodeEngine:
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._step(self.params, self.cache, tok, pos)
 
-        next_tok = np.asarray(self._sample(logits[:, 0], 0.0))  # (B,) or (B,cb)
+        # (B,) or (B, cb)
+        next_tok = np.asarray(self._sample(logits[:, 0], 0.0))
         for i in range(self.batch):
             req = self.slots[i]
             if req is None or not self.active[i]:
@@ -177,6 +178,8 @@ class DcnServingEngine:
         self.kernel_dispatches += trace.kernel_dispatches
         self.overlap.prepass_s += trace.overlap.prepass_s
         self.overlap.prepass_wait_s += trace.overlap.prepass_wait_s
+        self.overlap.schedule_s += trace.overlap.schedule_s
+        self.overlap.schedule_device_s += trace.overlap.schedule_device_s
         return _apply_head(self.params, self.cfg, y,
                            self.cfg.name == "segnet")
 
@@ -190,8 +193,12 @@ class DcnServingEngine:
             "images": self.images,
             "schedule_cache_hits": info["hits"],
             "schedule_cache_misses": info["misses"],
-            "schedule_cache_hit_rate": (info["hits"] / total) if total else 0.0,
+            "schedule_cache_hit_rate": (info["hits"] / total
+                                        if total else 0.0),
             "schedule_cache_size": info["size"],
             "kernel_dispatches": self.kernel_dispatches,
             "host_overlap_frac": self.overlap.host_overlap_frac,
+            "schedule_backend": self.graph_cfg.schedule_backend,
+            "schedule_s": self.overlap.schedule_s,
+            "schedule_device_frac": self.overlap.schedule_device_frac,
         }

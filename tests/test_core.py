@@ -4,9 +4,8 @@ traffic simulator, fusion planner."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (DramEnergyModel, FifoBuffer, LayerShape, TileGrid,
+from repro.core import (DramEnergyModel, FifoBuffer, LayerShape,
                         access_histogram, bilinear_sample, bli_coefficients,
                         deformable_conv2d, dram_energy,
                         fused_deformable_conv2d, init_deformable_conv,

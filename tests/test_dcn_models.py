@@ -1,7 +1,6 @@
 """Paper benchmark networks + fusion planner + workload accounting."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -48,7 +47,8 @@ class TestDcnNets:
 
     def test_layer_shapes_count(self):
         assert len(layer_shapes(get_dcn_config("vgg19", 8, smoke=True))) == 8
-        assert len(layer_shapes(get_dcn_config("segnet", -1, smoke=True))) == 32
+        assert len(
+            layer_shapes(get_dcn_config("segnet", -1, smoke=True))) == 32
 
     def test_gradients_flow_through_offsets(self):
         """The offset conv (stage 1) must receive gradients — the whole

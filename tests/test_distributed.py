@@ -1,16 +1,15 @@
 """Distributed behaviour on 8 fake host devices.
 
-These run in SUBPROCESSES with XLA_FLAGS=--xla_force_host_platform_device_count=8
-so the main pytest process keeps its single CPU device (per the dry-run
-isolation rule). Each scenario script asserts internally and exits 0.
+These run in SUBPROCESSES with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps its single CPU device (per the dry-run isolation rule).
+Each scenario script asserts internally and exits 0.
 """
 
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -22,7 +21,8 @@ def _run(body: str, timeout: int = 420):
     script = textwrap.dedent(body)
     proc = subprocess.run([sys.executable, "-c", script], env=env,
                           capture_output=True, text=True, timeout=timeout)
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
     return proc.stdout
 
 

@@ -2,9 +2,8 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.configs.base import ShapeCell, cell_supported, input_specs

@@ -11,7 +11,6 @@ from repro.models import lm, ssm, xlstm
 from repro.models.moe import MoeConfig, _route, init_moe, moe_apply
 from repro.models.params import (Maker, abstract_params, param_axes,
                                  param_count)
-from repro.models.transformer import BlockSpec, ModelConfig
 
 
 class TestMamba:
@@ -140,7 +139,8 @@ class TestLmConsistency:
                 cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=32.0))
         p = lm.init_lm(Maker("init", jax.random.PRNGKey(20)), cfg)
         b, s = 2, 12
-        shape = (b, s + 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s + 1)
+        shape = ((b, s + 1, cfg.n_codebooks) if cfg.n_codebooks > 1
+                 else (b, s + 1))
         tokens = jax.random.randint(jax.random.PRNGKey(21), shape, 0,
                                     cfg.vocab)
         # train-path logits at every position
@@ -173,7 +173,8 @@ class TestArchSmoke:
         cfg = configs.get_config(arch, smoke=True)
         p = lm.init_lm(Maker("init", jax.random.PRNGKey(30)), cfg)
         b, s = 2, 16
-        shape = (b, s + 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s + 1)
+        shape = ((b, s + 1, cfg.n_codebooks) if cfg.n_codebooks > 1
+                 else (b, s + 1))
         batch = {"tokens": jax.random.randint(jax.random.PRNGKey(31), shape,
                                               0, cfg.vocab)}
         if cfg.d_cross:

@@ -135,7 +135,8 @@ class TestPipelineTrace:
         _, trace, coords, grid = self._run(h=13, w=13, tile=8)
         B = np.asarray(tdt_from_coords(coords, grid, grid))
         for r in trace.images[0].records:
-            assert sorted(r.dep_tiles) == np.flatnonzero(B[r.out_tile]).tolist()
+            assert (sorted(r.dep_tiles)
+                    == np.flatnonzero(B[r.out_tile]).tolist())
 
 
 class TestPipelineModelBackend:

@@ -10,8 +10,11 @@ pytest.importorskip(
     reason="hypothesis not installed; property tests are optional extras")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.scheduler import FifoBuffer, schedule_tiles, sequential_schedule
+from repro.core.scheduler import (FifoBuffer, schedule_tiles,
+                                  schedule_tiles_device,
+                                  sequential_schedule)
 from repro.core.tiles import TileGrid, make_square_grid, tdt_from_coords
+from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.core.deform import bli_coefficients, bilinear_sample
 from repro.kernels.ops import coords_to_idx_coeff
 from repro.optim import quantize, dequantize
@@ -63,6 +66,65 @@ class TestSchedulerProperties:
             buf.touch(t)
         assert buf.loads + buf.hits == len(seq)
         assert len(buf.queue) <= cap
+
+
+class TestDeviceSchedulerProperties:
+    """The on-device scheduler is bit-exact vs the host reference on
+    arbitrary inputs — same orders, same load lists, and therefore the
+    same simulated DRAM tile-load counts."""
+
+    @given(n=st.integers(1, 24), density=st.floats(0.0, 0.95),
+           m=st.integers(1, 26), seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_device_schedule_identical_to_host(self, n, density, m, seed):
+        rng = np.random.default_rng(seed)
+        B = rng.random((n, n)) < density
+        host = schedule_tiles(B, m)
+        dev = schedule_tiles_device(B, m, interpret=True)
+        assert dev.oid == host.oid
+        assert dev.iid == host.iid
+        assert dev.reuse_overlap == host.reuse_overlap
+
+        def replay(s):
+            buf = FifoBuffer(m)
+            for loads in s.iid:
+                for t in loads:
+                    buf.touch(t)
+            return buf.loads
+
+        assert replay(dev) == replay(host)
+
+    @given(seed=st.integers(0, 10_000), h=st.integers(6, 24),
+           w=st.integers(6, 24), th=st.integers(2, 8),
+           tw=st.integers(2, 8), m=st.integers(1, 8))
+    @settings(**_SETTINGS)
+    def test_device_tdt_and_schedule_from_random_offsets(
+            self, seed, h, w, th, tw, m):
+        """Random sampling fields x random (possibly ragged) tile shapes:
+        the device TDT equals the host TDT and both backends schedule it
+        to the same simulated DRAM tile-load count."""
+        th, tw = min(th, h), min(tw, w)
+        grid = TileGrid(h, w, th, tw)
+        key = jax.random.PRNGKey(seed)
+        coords = jax.random.uniform(
+            key, (h, w, 9, 2), minval=-3.0,
+            maxval=h + 3.0).astype(jnp.float32)
+        B_host = np.asarray(tdt_from_coords(coords, grid, grid))
+        B_dev = np.asarray(tdt_from_coords_device(coords, grid, grid,
+                                                  interpret=True))
+        assert np.array_equal(B_host, B_dev)
+        host = schedule_tiles(B_host, m)
+        dev = schedule_tiles_device(B_dev, m, interpret=True)
+        assert dev.oid == host.oid and dev.iid == host.iid
+
+        def loads(s):
+            buf = FifoBuffer(m)
+            for dep in s.iid:
+                for t in dep:
+                    buf.touch(t)
+            return buf.loads
+
+        assert loads(dev) == loads(host)
 
 
 class TestBliProperties:
