@@ -120,24 +120,34 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
 def run_dispatch(csv=print, img: int = 13, n_deform: int = 2,
                  width_mult: float = 0.125, tile: int = 4, batch: int = 2,
                  repeats: int = 3, seed: int = 0):
-    """ISSUE 3 acceptance: batched grid dispatch vs the per-tile loop.
+    """ISSUE 3 + ISSUE 5 acceptance: per-tile loop vs per-image batched
+    grid vs whole-batch fused dispatch.
 
     Same network, same schedules (cache disabled for fair host-cost
     accounting); reports kernel-dispatch counts, end-to-end wall-clock
     (best of ``repeats`` after a compile warmup) and the host-prepass
-    overlap fraction of the staged batched path. The batched dispatch
-    count must stay at or below one per layer segment per group.
+    overlap fraction. The batched dispatch count must stay at or below
+    one per layer segment per group PER IMAGE; the batch-fused count
+    must be exactly one per layer segment PER BATCH.
     """
     cfg, params, x = _case(img, n_deform, width_mult, seed)
     x = jnp.concatenate([x] * batch) if batch > 1 else x
     graph = build_graph(cfg)
     y_ref = run_graph_dense(params["convs"], graph, x)
+    n_segments = sum(len(s.nodes) for s in
+                     partition_graph(graph,
+                                     GraphConfig().onchip_budget_bytes,
+                                     x.dtype.itemsize)
+                     if isinstance(s, FusedGroup))
 
     variants = {
         "per_tile": GraphConfig(tile=tile, dispatch="per_tile",
                                 staging_depth=1, use_schedule_cache=False),
         "batched": GraphConfig(tile=tile, dispatch="batched",
                                staging_depth=2, use_schedule_cache=False),
+        "batch_fused": GraphConfig(tile=tile, dispatch="batch_fused",
+                                   staging_depth=2,
+                                   use_schedule_cache=False),
     }
     results = {}
     for name, gcfg in variants.items():
@@ -161,6 +171,7 @@ def run_dispatch(csv=print, img: int = 13, n_deform: int = 2,
 
     t_p, tr_p, _ = results["per_tile"]
     t_b, tr_b, _ = results["batched"]
+    t_f, tr_f, _ = results["batch_fused"]
     seg_bound = all(g.kernel_dispatches <= len(g.layer_stats)
                     for g in tr_b.groups)
     csv(f"dispatch_bench,per_tile_ms={1e3 * t_p:.1f},"
@@ -170,6 +181,15 @@ def run_dispatch(csv=print, img: int = 13, n_deform: int = 2,
         f"host_overlap_frac={tr_b.host_overlap_frac:.3f},"
         f"dispatches_le_segments={'yes' if seg_bound else 'NO'},"
         f"improved={'yes' if t_b < t_p else 'NO'}")
+    # ISSUE 5 gate: one dispatch per layer segment for the WHOLE batch.
+    one_per_seg = tr_f.dispatches_per_batch == n_segments
+    csv(f"batch_fused_bench,batch={batch},n_segments={n_segments},"
+        f"dispatches_per_batch={tr_f.dispatches_per_batch},"
+        f"batched_dispatches={tr_b.kernel_dispatches},"
+        f"batch_fused_ms={1e3 * t_f:.1f},batched_ms={1e3 * t_b:.1f},"
+        f"speedup_vs_batched={t_b / t_f:.2f}x,"
+        f"one_dispatch_per_segment={'yes' if one_per_seg else 'NO'},"
+        f"improved={'yes' if t_f < t_b else 'NO'}")
     return results
 
 

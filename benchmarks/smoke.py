@@ -18,9 +18,13 @@ the CI bench-smoke job) if:
     baseline (ISSUE 3 gate);
   * the device scheduling backend is not bit-exact vs the host, or does
     not strictly reduce host scheduling time per image (ISSUE 4 gate);
+  * batch-fused dispatch (batch=4) does not hit exactly ONE kernel
+    dispatch per layer segment, or disagrees numerically with per-image
+    batched dispatch on either scheduling backend (ISSUE 5 gate);
   * ``--compare BASELINE_DIR`` is given (previous main-branch
-    ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or the
-    dispatch count regress more than 10% against the baseline.
+    ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or a
+    dispatch count (batched per-image, or batch-fused at batch>1)
+    regress more than 10% against the baseline.
 """
 
 from __future__ import annotations
@@ -80,6 +84,8 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
          lambda p: int(_record(p, "fig16_layer")["scheduled_loads"])),
         ("BENCH_graph.json", "batched dispatch count",
          lambda p: int(p["dispatch_count"])),
+        ("BENCH_graph.json", "batch-fused dispatch count (batch>1)",
+         lambda p: int(p["batch_fused_dispatch_count"])),
     ]
     for fname, what, extract in checks:
         path = os.path.join(baseline_dir, fname)
@@ -130,6 +136,10 @@ def main(argv=None) -> int:
             (bench_scheduling.run_backends, dict(h=16, w=16, c=8, c_out=8,
                                                  tile=8, buffer_tiles=2,
                                                  repeats=3)),
+            (bench_scheduling.run_batch_fused, dict(h=16, w=16, c=8,
+                                                    c_out=8, tile=8,
+                                                    buffer_tiles=2,
+                                                    batch=4, repeats=2)),
         ]),
         "BENCH_fusion.json": _collect("fusion", [
             (bench_fusion.run, dict(tdt_kwargs=TINY_TDT, channels=16,
@@ -142,7 +152,7 @@ def main(argv=None) -> int:
                                    tile=4)),
             (bench_graph.run_dispatch, dict(img=13, n_deform=2,
                                             width_mult=0.125, tile=4,
-                                            batch=2, repeats=2)),
+                                            batch=4, repeats=2)),
             (bench_graph.run_model_backend, dict(img=16, n_deform=2,
                                                  width_mult=0.125, tile=4)),
         ]),
@@ -173,6 +183,31 @@ def main(argv=None) -> int:
             print("ERROR: batched dispatches exceed layer-segment bound")
             rc = 1
 
+    # Batch-fused dispatch gate (ISSUE 5 acceptance): at batch=4 the
+    # whole-batch fused path must issue exactly ONE kernel dispatch per
+    # layer segment, strictly below the per-image batched count.
+    bf = next((r for r in graph_payload["records"]
+               if r["label"] == "batch_fused_bench"), None)
+    if bf is None:
+        print("ERROR: batch_fused_bench record missing from bench_graph")
+        rc = 1
+    else:
+        bf_dispatches = int(bf["dispatches_per_batch"])
+        graph_payload["batch_fused_dispatch_count"] = bf_dispatches
+        graph_payload["batch_fused_dispatches_per_batch"] = bf_dispatches
+        graph_payload["batch_fused_batch"] = int(bf["batch"])
+        graph_payload["n_layer_segments"] = int(bf["n_segments"])
+        if bf["one_dispatch_per_segment"] != "yes":
+            print(f"ERROR: batch-fused dispatches ({bf_dispatches}) != "
+                  f"one per layer segment ({bf['n_segments']}) at "
+                  f"batch={bf['batch']}")
+            rc = 1
+        if bf_dispatches >= int(bf["batched_dispatches"]):
+            print(f"ERROR: batch-fused dispatch count regressed: "
+                  f"{bf_dispatches} >= per-image batched "
+                  f"{bf['batched_dispatches']}")
+            rc = 1
+
     # Scheduling-backend gate (ISSUE 4 acceptance): the device scheduler
     # must be bit-exact vs the host and strictly reduce the host-side
     # scheduling time per image.
@@ -197,6 +232,29 @@ def main(argv=None) -> int:
         if backend["host_prepass_reduced"] != "yes":
             print("ERROR: schedule_backend='device' did not reduce host "
                   "scheduling time per image")
+            rc = 1
+
+    # Pipeline-level batch-fused records: one dispatch per batch, both
+    # backends numerically matching per-image batched dispatch, and the
+    # device backend's host prepass residue archived for the trajectory.
+    bf_sched = [r for r in sched_payload["records"]
+                if r["label"] == "batch_fused"]
+    if not bf_sched:
+        print("ERROR: batch_fused records missing from bench_scheduling")
+        rc = 1
+    for r in bf_sched:
+        sched_payload[f"batch_fused_{r['backend']}_dispatches"] = int(
+            r["dispatches_per_batch"])
+        sched_payload[f"batch_fused_{r['backend']}_residue_s"] = float(
+            r["host_prepass_residue_s"])
+        if r["match"] != "yes":
+            print(f"ERROR: batch-fused != batched numerics "
+                  f"(backend={r['backend']})")
+            rc = 1
+        if int(r["dispatches_per_batch"]) >= int(r["batched_dispatches"]):
+            print(f"ERROR: pipeline batch-fused dispatches "
+                  f"({r['dispatches_per_batch']}) not below per-image "
+                  f"batched ({r['batched_dispatches']})")
             rc = 1
 
     if args.compare:

@@ -34,8 +34,29 @@ per-pixel path lives in ``repro.core.simulator``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Any
 
 import numpy as np
+
+
+class _HostBuildCounter:
+    """Instrumentation: counts host-side ``TileSchedule`` constructions.
+
+    The batch-fused executors promise a zero-host-round-trip hot path
+    with ``schedule_backend="device"`` — device schedule arrays flow
+    straight into the dispatch operands, and the Python ``TileSchedule``
+    is only assembled lazily for traces. Tests pin that promise by
+    snapshotting this counter around an executor call.
+    """
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def bump(self) -> None:
+        self.count += 1
+
+
+host_schedule_builds = _HostBuildCounter()
 
 
 def pow2_pad(x: int) -> int:
@@ -194,6 +215,7 @@ def schedule_tiles(B, buffer_tiles: int, backend: str = "host",
             buf.touch(t)
         os_mask[nxt] = False
 
+    host_schedule_builds.bump()
     return TileSchedule(oid=oid, iid=iid, reuse_overlap=overlaps)
 
 
@@ -223,6 +245,7 @@ def assemble_device_schedule(oid_seq: np.ndarray, klass: np.ndarray,
         iid.append(np.flatnonzero(row == 0).tolist()
                    + np.flatnonzero(row == 1).tolist()
                    + np.flatnonzero(row == 2).tolist())
+    host_schedule_builds.bump()
     return TileSchedule(oid=oid_seq[:n_sched].tolist(), iid=iid,
                         reuse_overlap=overlap[1:n_sched].tolist())
 
@@ -259,4 +282,117 @@ def sequential_schedule(B: np.ndarray) -> TileSchedule:
     B = np.asarray(B, dtype=bool)
     oid = [o for o in range(B.shape[0]) if B[o].any()]
     iid = [_ids_of(B[o]) for o in oid]
+    host_schedule_builds.bump()
     return TileSchedule(oid=oid, iid=iid)
+
+
+# ---------------------------------------------------------------------------
+# Dense device-schedule handoff (batch-fused dispatch, zero host round-trip)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DeviceSchedule:
+    """Algorithm-1 schedule as dense dispatch-ready arrays.
+
+    The batch-fused executors consume schedules in exactly the dense form
+    the batched kernel's scalar-prefetch machinery needs, so with
+    ``schedule_backend="device"`` the greedy kernel's outputs flow here
+    as device arrays end-to-end — no host reassembly, no Python
+    ``TileSchedule`` on the hot path. All arrays have ``n_out`` rows
+    (one per possible scheduling step); the padded suffix past the real
+    schedule length carries ``oid = -1`` / ``dep_cnt = 0`` and is what
+    ragged batch concatenation elides.
+
+      oid     (n_out,)        int32 — scheduled tile per step, -1 padding
+      dep_tbl (n_out, k_pad)  int32 — dependent input tiles in LOAD order
+                                      (the three Algorithm-1 priority
+                                      classes), rows zero-padded
+      dep_cnt (n_out,)        int32 — true dep count per step
+      overlap (n_out,)        int32 — per-step reuse overlap diagnostic
+
+    Arrays may live on device (jax) or host (numpy) — both backends emit
+    bit-identical values. ``to_host()`` lazily assembles the classic
+    ``TileSchedule`` for traces and simulator cross-checks.
+    """
+
+    oid: Any
+    dep_tbl: Any
+    dep_cnt: Any
+    overlap: Any
+    _host: TileSchedule | None = None
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.oid.shape[0])
+
+    @property
+    def k_pad(self) -> int:
+        return int(self.dep_tbl.shape[1])
+
+    def to_host(self) -> TileSchedule:
+        """Assemble (and memoize) the host ``TileSchedule`` — OFF the hot
+        path: traces and cross-checks only."""
+        if self._host is None:
+            oid = np.asarray(self.oid).reshape(-1)
+            dep = np.asarray(self.dep_tbl)
+            cnt = np.asarray(self.dep_cnt).reshape(-1)
+            ovl = np.asarray(self.overlap).reshape(-1)
+            n_sched = int((oid >= 0).sum())
+            host_schedule_builds.bump()
+            self._host = TileSchedule(
+                oid=oid[:n_sched].tolist(),
+                iid=[dep[t, :cnt[t]].tolist() for t in range(n_sched)],
+                reuse_overlap=ovl[1:n_sched].tolist())
+        return self._host
+
+    @classmethod
+    def from_host(cls, sched: TileSchedule, n_out: int,
+                  k_pad: int | None = None) -> "DeviceSchedule":
+        """Dense padded form of a host-built schedule (numpy arrays).
+
+        Pads to ``n_out`` rows so batch concatenation sees the same
+        uniform per-image row count as the device path.
+        """
+        t = len(sched.oid)
+        if t > n_out:
+            raise ValueError(f"schedule has {t} steps > n_out={n_out}")
+        oid_d, deps_d, cnt_d = sched.dense(k_pad)
+        oid = np.full((n_out,), -1, np.int32)
+        oid[:t] = oid_d
+        dep_tbl = np.zeros((n_out, deps_d.shape[1]), np.int32)
+        dep_tbl[:t] = deps_d
+        cnt = np.zeros((n_out,), np.int32)
+        cnt[:t] = cnt_d
+        ovl = np.zeros((n_out,), np.int32)
+        ro = np.asarray(sched.reuse_overlap[:max(t - 1, 0)], np.int32)
+        ovl[1:1 + ro.size] = ro   # sequential schedules carry no overlaps
+        return cls(oid, dep_tbl, cnt, ovl, _host=sched)
+
+
+def schedule_arrays_device(B, m: int, *, k_pad: int | None = None,
+                           interpret: bool | None = None) -> DeviceSchedule:
+    """Algorithm 1 on-device, emitted directly as dispatch arrays.
+
+    Unlike :func:`schedule_tiles_device` the result never touches the
+    host: ``greedy_schedule_arrays`` runs the selection, and the class
+    rows are converted to load-ordered dep tables with a stable device
+    argsort (``kernels.dcn_schedule.dispatch_arrays_from_klass``).
+    ``k_pad`` defaults to ``pow2_pad(n_in)`` — static, so no host sync
+    on the data-dependent max dep count.
+    """
+    import jax
+
+    from repro.kernels.dcn_schedule import (dispatch_arrays_from_klass,
+                                            greedy_schedule_arrays)
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B = jax.numpy.asarray(B)
+    n_in = B.shape[1]
+    if k_pad is None:
+        k_pad = pow2_pad(n_in)
+    oid_seq, klass, ovl = greedy_schedule_arrays(
+        B, int(m), interpret=bool(interpret))
+    oid, dep_tbl, cnt = dispatch_arrays_from_klass(oid_seq, klass, k_pad)
+    return DeviceSchedule(oid, dep_tbl, cnt, ovl.reshape(-1))

@@ -143,7 +143,9 @@ def compose_tdt(b_down: np.ndarray, b_up: np.ndarray) -> np.ndarray:
     if d.shape[1] != u.shape[0]:
         raise ValueError(
             f"TDT shapes do not chain: down {d.shape} x up {u.shape}")
-    return (d.astype(np.uint8) @ u.astype(np.uint8)) > 0
+    # int32, not uint8: a pair sharing a multiple of 256 intermediate
+    # tiles would wrap to 0 and silently drop the dependency.
+    return (d.astype(np.int32) @ u.astype(np.int32)) > 0
 
 
 def compose_tdt_chain(b_layers: list[np.ndarray]) -> np.ndarray:
@@ -156,6 +158,25 @@ def compose_tdt_chain(b_layers: list[np.ndarray]) -> np.ndarray:
     for b in b_layers[-2::-1]:
         comp = compose_tdt(comp, b)
     return comp
+
+
+def compose_tdt_chain_device(b_layers: list) -> jax.Array:
+    """On-device :func:`compose_tdt_chain`: boolean matrix-chain product
+    as jnp int32 matmuls, so a fused group's composite TDT can flow from
+    the device TDT kernels straight into the device scheduler with no
+    host round trip. Bit-exact vs the numpy chain (both are exact
+    boolean algebra)."""
+    if not b_layers:
+        raise ValueError("empty layer chain")
+    comp = jnp.asarray(b_layers[-1]).astype(jnp.int32)
+    for b in b_layers[-2::-1]:
+        up = jnp.asarray(b).astype(jnp.int32)
+        if comp.shape[1] != up.shape[0]:
+            raise ValueError(
+                f"TDT shapes do not chain: down {comp.shape} x up "
+                f"{up.shape}")
+        comp = (comp @ up > 0).astype(jnp.int32)
+    return comp > 0
 
 
 def access_histogram(coords: jax.Array, h: int, w: int) -> jax.Array:

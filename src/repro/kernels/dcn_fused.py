@@ -235,3 +235,150 @@ def dcn_fused_schedule(
         out_shape=jax.ShapeDtypeStruct((t, p, o), x_tiles.dtype),
         interpret=interpret,
     )(dep_tbl, dep_cnt, idx2, coeff2, x_tiles, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Batch-fused dispatch: ONE pallas_call for the schedules of a whole batch.
+# ---------------------------------------------------------------------------
+
+
+def _batch_kernel(row_ref, dep_ref, cnt_ref, idx_ref, coeff_ref, x_ref,
+                  w_ref, b_ref, o_ref, acc_ref,
+                  *, tp: int, kk: int, k_pad: int, t_in: int):
+    """One (batch-grid row, pixel block, dep slot) step.
+
+    row_ref:   (G,) int32 scalar prefetch — per grid row, the flat
+               ``img * T_out + out_tile`` row of the idx/coeff operands
+               (clamped on padded rows; consumed by the BlockSpecs).
+    dep_ref:   (G, k_pad) int32 scalar prefetch — GLOBAL dep tile ids
+               ``img * T_in + dep``; rows beyond an image's schedule
+               length are pre-filled with the image's last real dep so
+               the clamped x index map repeats the block and the DMA is
+               elided across image boundaries.
+    cnt_ref:   (G,) int32 true dep count; 0 marks a ragged-padding row,
+               whose compute is skipped entirely.
+    idx_ref:   (1, bp*KK, 4) int32 plane-global packed addresses
+               ``tile_id * tp + offset`` (schedule-independent: packed
+               once per image in plane order).
+    x_ref:     (1, tp, C) — input tile ``dep[g, k]`` of image ``img``.
+    acc_ref:   (bp*KK, C) f32 VMEM scratch.
+
+    Same §IV-D fusion as ``_sched_kernel``; the only difference is the
+    addressing: idx is global to the image's tile array, so slot k's
+    partial matmul localises it against the dep tile the grid fetched
+    (``idx - dep * tp``) instead of assuming slot-contiguous packing.
+    """
+    g = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < cnt_ref[g])
+    def _accumulate():
+        idx = idx_ref[0]
+        coeff = coeff_ref[0].astype(jnp.float32)
+        rows = idx.shape[0]                  # bp * KK
+        dep_local = dep_ref[g, k] % t_in     # image-local dep tile id
+        local = idx - dep_local * tp         # in [0, tp) iff in this tile
+        cols = jax.lax.broadcasted_iota(jnp.int32, (rows, tp), 1)
+        w_bli = jnp.zeros((rows, tp), jnp.float32)
+        for j in range(4):
+            onehot = (cols == local[:, j:j + 1]).astype(jnp.float32)
+            w_bli = w_bli + onehot * coeff[:, j:j + 1]
+        x = x_ref[0].astype(jnp.float32)     # (tp, C)
+        acc_ref[...] += jnp.dot(w_bli, x,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_pad - 1)
+    def _flush():
+        rows, c = acc_ref.shape
+        bp = rows // kk
+        patches = acc_ref[...].reshape(bp, kk * c)
+        w = w_ref[...].astype(jnp.float32)
+        acc = jnp.dot(patches, w, preferred_element_type=jnp.float32)
+        o_ref[0] = (acc + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_in", "kernel_size", "block_p",
+                                    "interpret"))
+def dcn_fused_batch(
+    x_tiles: jax.Array,   # (N*T_in, tp, C_in) every image's input tiles
+    row_id: jax.Array,    # (G,) int32 img*T_out + out_tile (clamped)
+    dep_glb: jax.Array,   # (G, k_pad) int32 img*T_in + dep, load order
+    dep_cnt: jax.Array,   # (G,) int32 true dep count (0 = padded row)
+    idx: jax.Array,       # (N*T_out, P, KK, 4) int32 plane-global addrs
+    coeff: jax.Array,     # (N*T_out, P, KK, 4) float BLI coefficients
+    w: jax.Array,         # (KK, C_in, C_out) shared main conv weights
+    b: jax.Array,         # (C_out,)
+    *,
+    t_in: int,
+    kernel_size: int = 3,
+    block_p: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused Eq.2+3 over the concatenated schedules of a WHOLE BATCH ->
+    (G, P, C_out), one row per batch-grid slot.
+
+    The batch-fused form of :func:`dcn_fused_schedule`: all N images'
+    Algorithm-1 schedules are concatenated (ragged-padded per image)
+    into one leading grid dimension, so a layer segment costs ONE kernel
+    dispatch per batch instead of one per image. Weights are shared
+    across the grid; the per-image tile arrays are addressed through the
+    scalar-prefetched global ids (``img * T_in + dep``), and ragged
+    padding rows (``dep_cnt == 0``) skip compute with their DMAs elided
+    by the clamped index map. The caller scatters valid rows back by
+    ``row_id``.
+    """
+    nt_in, tp, c = x_tiles.shape
+    g_rows, p, kk, _ = idx.shape
+    k_pad = dep_glb.shape[1]
+    o = w.shape[-1]
+    assert kk == kernel_size * kernel_size, (kk, kernel_size)
+    bp = min(block_p, p)
+    if p % bp:
+        raise ValueError(f"P={p} must tile by {bp}; pad upstream")
+    if nt_in % t_in:
+        raise ValueError(f"x_tiles rows {nt_in} not a multiple of "
+                         f"t_in={t_in}")
+    g = row_id.shape[0]
+    if g == 0:          # empty batch grid: nothing to dispatch
+        return jnp.zeros((0, p, o), x_tiles.dtype)
+
+    idx2 = idx.reshape(g_rows, p * kk, 4)
+    coeff2 = coeff.reshape(g_rows, p * kk, 4)
+    w2 = w.reshape(kk * c, o)
+    b2 = b.reshape(1, o)
+
+    def x_index(gi, j, k, row, dep, cnt):
+        # Clamp padding slots to the last real dep (pre-filled across
+        # whole padded rows): consecutive padding steps repeat the block
+        # index, so no DMA is issued for them.
+        return (dep[gi, jnp.minimum(k, jnp.maximum(cnt[gi] - 1, 0))], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(g, p // bp, k_pad),
+        in_specs=[
+            pl.BlockSpec((1, bp * kk, 4),
+                         lambda gi, j, k, row, dep, cnt: (row[gi], j, 0)),
+            pl.BlockSpec((1, bp * kk, 4),
+                         lambda gi, j, k, row, dep, cnt: (row[gi], j, 0)),
+            pl.BlockSpec((1, tp, c), x_index),
+            pl.BlockSpec((kk * c, o),
+                         lambda gi, j, k, row, dep, cnt: (0, 0)),
+            pl.BlockSpec((1, o), lambda gi, j, k, row, dep, cnt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, o),
+                               lambda gi, j, k, row, dep, cnt: (gi, j, 0)),
+        scratch_shapes=[pltpu.VMEM((bp * kk, c), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_batch_kernel, tp=tp, kk=kk, k_pad=k_pad,
+                          t_in=t_in),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, p, o), x_tiles.dtype),
+        interpret=interpret,
+    )(row_id, dep_glb, dep_cnt, idx2, coeff2, x_tiles, w2, b2)

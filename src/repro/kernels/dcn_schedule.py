@@ -234,6 +234,61 @@ def _greedy_kernel(b_ref, oid_ref, klass_ref, ovl_ref,
         sm_ref[1] = nxt
 
 
+@functools.partial(jax.jit, static_argnames=("k_pad",))
+def dispatch_arrays_from_klass(
+    oid_seq: jax.Array,   # (n_out, 1) or (n_out,) int32, -1 padded suffix
+    klass: jax.Array,     # (n_out, n_in) int32 priority classes (0/1/2/3)
+    k_pad: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-side schedule -> dispatch handoff (zero host round-trip).
+
+    Converts the greedy kernel's per-step class rows into the dense
+    operands the batched dispatch consumes, entirely as jnp ops on
+    device — the host never rebuilds a ``TileSchedule`` on this path:
+
+      oid     (n_out,)       int32 — scheduled tile per step (-1 padding)
+      dep_tbl (n_out, k_pad) int32 — dependent input tiles in LOAD order:
+              class 0 (loaded) ids asc ++ class 1 (seq) asc ++ class 2
+              (last) asc — exactly ``input_tile_scheduling``'s order,
+              recovered with one stable argsort over the class row.
+      dep_cnt (n_out,)       int32 — true dep count (0 on padded steps).
+
+    ``k_pad`` must be >= n_in or any schedule's max dep count; the
+    static choice ``pow2_pad(n_in)`` needs no host sync.
+    """
+    oid = oid_seq.reshape(-1).astype(jnp.int32)
+    n_out, n_in = klass.shape
+    # Stable sort on the class alone: ids ascend within each class.
+    order = jnp.argsort(klass.astype(jnp.int32), axis=1)   # (n_out, n_in)
+    cnt = jnp.sum(klass < 3, axis=1).astype(jnp.int32)
+    if k_pad < n_in:
+        order = order[:, :k_pad]  # only valid if max cnt <= k_pad
+    elif k_pad > n_in:
+        order = jnp.pad(order, ((0, 0), (0, k_pad - n_in)))
+    # Zero out padding slots so rows match the host dense() convention.
+    slot = jax.lax.broadcasted_iota(jnp.int32, (n_out, k_pad), 1)
+    dep_tbl = jnp.where(slot < cnt[:, None], order, 0).astype(jnp.int32)
+    return oid, dep_tbl, cnt
+
+
+def tdt_dispatch_arrays(b: jax.Array, k_pad: int
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Dense dispatch rows straight from a TDT (no scheduling): per output
+    tile its dependent input tiles in ascending id order + counts. Used
+    for interior fused-group layers, whose grid order is plane order.
+    All jnp — stays on device for the batch-fused handoff."""
+    bi = b.astype(jnp.int32)
+    n_out, n_in = bi.shape
+    order = jnp.argsort(1 - bi, axis=1)                    # deps first, asc
+    cnt = jnp.sum(bi, axis=1).astype(jnp.int32)
+    if k_pad < n_in:
+        order = order[:, :k_pad]
+    elif k_pad > n_in:
+        order = jnp.pad(order, ((0, 0), (0, k_pad - n_in)))
+    slot = jax.lax.broadcasted_iota(jnp.int32, (n_out, k_pad), 1)
+    return jnp.where(slot < cnt[:, None], order, 0).astype(jnp.int32), cnt
+
+
 @functools.partial(jax.jit, static_argnames=("m", "interpret"))
 def greedy_schedule_arrays(
     b: jax.Array,        # (n_out, n_in) bool/int TDT

@@ -42,9 +42,12 @@ from repro.runtime.graph import (
     partition_graph,
 )
 from repro.runtime.packing import (
+    BatchDispatch,
     NeighbourTables,
     build_neighbour_tables,
+    pack_batch_schedules,
     pack_output_tile,
+    pack_plane_operands,
     pack_schedule_tiles,
     plane_to_tiles,
 )
@@ -65,9 +68,12 @@ from repro.runtime.trace import (
 )
 
 __all__ = [
+    "BatchDispatch",
     "NeighbourTables",
     "build_neighbour_tables",
+    "pack_batch_schedules",
     "pack_output_tile",
+    "pack_plane_operands",
     "pack_schedule_tiles",
     "plane_to_tiles",
     "PipelineConfig",

@@ -68,6 +68,11 @@ class ScheduleCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        # Batch-fused accounting: per-image lookups inside a batch
+        # assembly (a partial batch hit = some images skip scheduling
+        # while the misses are built and spliced into the batch grid).
+        self.image_hits = 0
+        self.batch_assemblies = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -99,16 +104,27 @@ class ScheduleCache:
         self.put(key, value)
         return value, False
 
+    def note_batch_assembly(self, image_hits: int) -> None:
+        """Record one batch-grid assembly and how many of its images were
+        served from the cache (partial batch hits)."""
+        with self._lock:
+            self.batch_assemblies += 1
+            self.image_hits += int(image_hits)
+
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self.hits = 0
             self.misses = 0
+            self.image_hits = 0
+            self.batch_assemblies = 0
 
     def info(self) -> dict[str, int]:
         with self._lock:
             return {"size": len(self._entries), "maxsize": self.maxsize,
-                    "hits": self.hits, "misses": self.misses}
+                    "hits": self.hits, "misses": self.misses,
+                    "image_hits": self.image_hits,
+                    "batch_assemblies": self.batch_assemblies}
 
 
 _DEFAULT_CACHE = ScheduleCache(maxsize=128)

@@ -54,21 +54,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import conv2d, deformable_conv2d, offsets_to_coords
-from repro.core.scheduler import (TileSchedule, pow2_pad, schedule_tiles,
+from repro.core.scheduler import (DeviceSchedule, TileSchedule, pow2_pad,
+                                  schedule_arrays_device, schedule_tiles,
                                   sequential_schedule)
-from repro.core.tiles import (TileGrid, compose_tdt_chain, tdt_from_coords,
+from repro.core.tiles import (TileGrid, compose_tdt_chain,
+                              compose_tdt_chain_device, tdt_from_coords,
                               tdt_standard_conv)
-from repro.kernels.dcn_fused import dcn_fused_schedule, dcn_fused_tile
-from repro.kernels.dcn_schedule import tdt_from_coords_device
+from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
+                                     dcn_fused_tile)
+from repro.kernels.dcn_schedule import (tdt_dispatch_arrays,
+                                        tdt_from_coords_device)
 from repro.kernels.ops import round_up
 from repro.runtime.cache import (ScheduleCache, chain_digest, conv_digest,
                                  coords_digest, default_schedule_cache)
 from repro.runtime.graph import (DeformNode, FusedGroup, NetGraph, PoolNode,
                                  Segment, UpsampleNode, boundary_bytes,
                                  group_weight_bytes, partition_graph)
-from repro.runtime.packing import (build_neighbour_tables, pack_output_tile,
-                                   pack_schedule_tiles, plane_to_tiles,
-                                   tiles_to_plane)
+from repro.runtime.packing import (build_neighbour_tables,
+                                   pack_batch_schedules, pack_output_tile,
+                                   pack_plane_operands, pack_schedule_tiles,
+                                   plane_to_tiles, tiles_to_plane)
 from repro.runtime.pipeline import (resolve_interpret, run_staged,
                                     validate_dispatch_config)
 from repro.runtime.trace import (GroupTrace, LayerBufferStats, NetworkTrace,
@@ -93,7 +98,11 @@ class GraphConfig:
     interpret: bool | None = None         # None = auto (CPU -> interpret)
     onchip_budget_bytes: int = ONCHIP_BUDGET_BYTES  # drives group planning
     use_schedule_cache: bool = True
-    # "batched": one pallas_call grid per (group, layer segment).
+    # "batched": one pallas_call grid per (group, layer segment) PER IMAGE.
+    # "batch_fused": the concatenated schedules of all batch images as one
+    #   grid per layer segment — dispatches per segment drop from N to 1,
+    #   and with schedule_backend="device" the schedule arrays flow into
+    #   the dispatch operands with zero host round trip.
     # "per_tile": PR 2 demand-driven per-tile dispatch loop.
     dispatch: str = "batched"
     # "host": TDT scatter + Algorithm-1 loop in host numpy/Python.
@@ -607,6 +616,385 @@ def _run_group(
     return y, trace
 
 
+# ---------------------------------------------------------------------------
+# Batch-fused dispatch: one kernel call per layer segment for the WHOLE batch.
+# ---------------------------------------------------------------------------
+
+
+def apply_boundary_batch(planes: jax.Array, node: Segment) -> jax.Array:
+    """Batched :func:`apply_boundary_dense` — one op for all N images."""
+    if isinstance(node, PoolNode):
+        k = node.window
+        return jax.lax.reduce_window(planes, -jnp.inf, jax.lax.max,
+                                     (1, k, k, 1), (1, k, k, 1), "VALID")
+    f = node.factor
+    return jnp.repeat(jnp.repeat(planes, f, axis=1), f, axis=2)
+
+
+def _advance_dense_batch(planes: jax.Array, node, p,
+                         max_displacement: float | None) -> jax.Array:
+    """Batched stage-1 chain advance (XLA, one dispatch for all images)."""
+    if isinstance(node, DeformNode):
+        y = deformable_conv2d(planes, p, node.kernel_size, node.variant,
+                              max_displacement)
+    else:
+        y = conv2d(planes, p["w"], p["b"])
+    return jax.nn.relu(y) if node.relu else y
+
+
+@dataclasses.dataclass
+class _ImageGroupSched:
+    """One image's schedule bundle for one fused group, in dense
+    dispatch form (the schedule-cache value for batch-fused mode)."""
+
+    b_layers: list                        # per-layer TDTs (device or np)
+    exec_scheds: list                     # per-layer DeviceSchedule | None:
+    #   interior DCN layers dispatch in plane order over their own TDT
+    #   rows; the LAST layer dispatches in the composite Algorithm-1
+    #   order (its dep rows still come from its own TDT — the composite
+    #   iid is the group-input load order the trace records).
+    ds: DeviceSchedule                    # composite schedule (records)
+
+
+@dataclasses.dataclass
+class _BatchLayerOps:
+    """One DCN layer's batch-fused operands (whole batch)."""
+
+    batch: object                         # packing.BatchDispatch
+    idx: jax.Array                        # (N*T, p_pad, KK, 4)
+    coeff: jax.Array
+
+
+@dataclasses.dataclass
+class _BatchGroupArtifacts:
+    """Prepass products of one fused group for the WHOLE batch."""
+
+    grid: TileGrid
+    m: int
+    bundles: list[_ImageGroupSched]
+    cache_hits: list[bool | None]
+    layer_ops: list[_BatchLayerOps | None]
+    schedule_s: float = 0.0
+    schedule_device_s: float = 0.0
+
+
+def _group_batch_prepass(
+    planes: jax.Array,                    # (N, H, W, C) dense chain state
+    group: FusedGroup,
+    convs: list,
+    grid: TileGrid,
+    m: int,
+    cfg: GraphConfig,
+    max_displacement: float | None,
+    cache: ScheduleCache | None,
+    need_out_plane: bool,
+    interp: bool,
+) -> tuple[_BatchGroupArtifacts, jax.Array]:
+    """Batch-level prepass for one group: the stage-1 chain runs batched
+    (one XLA dispatch per layer for all images), per-image composite
+    schedules are built in dense form (cached — partial batch hits skip
+    scheduling for the hit images), and the per-layer batch operands are
+    concatenated with per-image base offsets. With the device scheduling
+    backend everything after the digest stays on-device."""
+    n = planes.shape[0]
+    device = cfg.schedule_backend == "device" and cfg.schedule == "alg1"
+    t_out = grid.num_tiles
+    k_pad = pow2_pad(t_out)
+    tp = grid.th * grid.tw
+    bp = min(cfg.block_p, tp)
+    p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
+    last = group.n_layers - 1
+
+    needs_plane = [need_out_plane
+                   or any(isinstance(nd, DeformNode)
+                          for nd in group.nodes[j + 1:])
+                   for j in range(group.n_layers)]
+    plane = planes
+    coords_layers: list = []
+    for j, node in enumerate(group.nodes):
+        p = convs[node.param_idx]
+        if isinstance(node, DeformNode):
+            offsets = conv2d(plane, p.w_off, p.b_off)
+            coords_layers.append(offsets_to_coords(
+                offsets.astype(jnp.float32), node.kernel_size,
+                node.variant, max_displacement))
+        else:
+            coords_layers.append(None)
+        if needs_plane[j]:
+            plane = _advance_dense_batch(plane, node, p, max_displacement)
+
+    t0 = time.perf_counter()
+
+    def build_bundle(i: int) -> _ImageGroupSched:
+        b_layers: list = []
+        for j, node in enumerate(group.nodes):
+            if coords_layers[j] is None:
+                B = tdt_standard_conv(grid, grid, node.kernel_size)
+                b_layers.append(jnp.asarray(B) if device else B)
+            elif device:
+                b_layers.append(tdt_from_coords_device(
+                    coords_layers[j][i], grid, grid, interpret=interp))
+            else:
+                b_layers.append(np.asarray(tdt_from_coords(
+                    coords_layers[j][i], grid, grid)))
+        if device:
+            comp = compose_tdt_chain_device(b_layers)
+            ds = schedule_arrays_device(comp, m, k_pad=k_pad,
+                                        interpret=interp)
+        else:
+            comp = compose_tdt_chain([np.asarray(b) for b in b_layers])
+            if cfg.schedule == "alg1":
+                sched = schedule_tiles(comp, m)
+            elif cfg.schedule == "sequential":
+                sched = sequential_schedule(comp)
+            else:
+                raise ValueError(f"unknown schedule: {cfg.schedule!r}")
+            ds = DeviceSchedule.from_host(sched, t_out)
+        exec_scheds: list = []
+        for j, node in enumerate(group.nodes):
+            if not isinstance(node, DeformNode):
+                exec_scheds.append(None)
+                continue
+            dep_j, cnt_j = tdt_dispatch_arrays(jnp.asarray(b_layers[j]),
+                                               k_pad)
+            if j == last:
+                oid = jnp.asarray(ds.oid).reshape(-1)
+                sel = jnp.maximum(oid, 0)
+                exec_scheds.append(DeviceSchedule(
+                    oid, dep_j[sel],
+                    jnp.where(oid >= 0, cnt_j[sel], 0),
+                    jnp.zeros_like(oid)))
+            else:
+                ar = jnp.arange(t_out, dtype=jnp.int32)
+                exec_scheds.append(DeviceSchedule(
+                    ar, dep_j, cnt_j, jnp.zeros_like(ar)))
+        return _ImageGroupSched(b_layers, exec_scheds, ds)
+
+    bundles, hits = [], []
+    for i in range(n):
+        if cache is None:
+            bundles.append(build_bundle(i))
+            hits.append(None)
+            continue
+        digests = []
+        for j, node in enumerate(group.nodes):
+            if coords_layers[j] is None:
+                digests.append(conv_digest(node.kernel_size, grid))
+            else:
+                digests.append(coords_digest(coords_layers[j][i], grid))
+        key = (chain_digest(digests, grid), grid.th, grid.tw, m,
+               cfg.schedule, "dense")
+        bundle, hit = cache.get_or_build(key,
+                                         lambda i=i: build_bundle(i))
+        bundles.append(bundle)
+        hits.append(hit)
+    schedule_s = time.perf_counter() - t0
+    if cache is not None:
+        cache.note_batch_assembly(sum(bool(h) for h in hits))
+
+    layer_ops: list[_BatchLayerOps | None] = []
+    for j, node in enumerate(group.nodes):
+        if not isinstance(node, DeformNode):
+            layer_ops.append(None)
+            continue
+        batch = pack_batch_schedules(
+            [bundles[i].exec_scheds[j] for i in range(n)], t_out, t_out)
+        kk = node.kernel_size ** 2
+        idx, coeff = jax.vmap(
+            lambda c: pack_plane_operands(c, grid, p_pad)
+        )(coords_layers[j])
+        layer_ops.append(_BatchLayerOps(
+            batch,
+            idx.reshape(n * t_out, p_pad, kk, 4),
+            coeff.reshape(n * t_out, p_pad, kk, 4)))
+
+    art = _BatchGroupArtifacts(
+        grid=grid, m=m, bundles=bundles, cache_hits=hits,
+        layer_ops=layer_ops, schedule_s=schedule_s,
+        schedule_device_s=schedule_s if device else 0.0)
+    return art, plane
+
+
+def _exec_group_batch_fused(
+    planes: jax.Array,                    # (N, H, W, C_in)
+    group: FusedGroup,
+    convs: list,
+    cfg: GraphConfig,
+    interpret: bool,
+    art: _BatchGroupArtifacts,
+) -> tuple[jax.Array, int]:
+    """Execute one fused group for the whole batch: ONE dispatch per
+    layer segment (the batch-fused kernel for DCN layers, one batched
+    XLA conv for standard layers)."""
+    n = planes.shape[0]
+    grid = art.grid
+    h, w = grid.h, grid.w
+    tp = grid.th * grid.tw
+    t = grid.num_tiles
+    masks_arr = jnp.stack(
+        [jnp.asarray(_tile_valid_mask(grid, ti), planes.dtype)
+         for ti in range(t)])                               # (T, tp, 1)
+    last = group.n_layers - 1
+
+    flat = jax.vmap(
+        lambda p: plane_to_tiles(p, grid))(planes).reshape(n * t, tp, -1)
+    dispatches = 0
+    for j, node in enumerate(group.nodes):
+        p = convs[node.param_idx]
+        if isinstance(node, DeformNode):
+            ops = art.layer_ops[j]
+            kk = node.kernel_size ** 2
+            w2 = p.w.reshape(kk, node.c_in, node.c_out)
+            y = dcn_fused_batch(
+                flat, ops.batch.row_id, ops.batch.dep_glb,
+                ops.batch.dep_cnt, ops.idx, ops.coeff, w2, p.b,
+                t_in=t, kernel_size=node.kernel_size, block_p=cfg.block_p,
+                interpret=interpret)[:, :tp]
+            if node.relu:
+                y = jax.nn.relu(y)
+            y = y * masks_arr[jnp.maximum(ops.batch.oid, 0)]
+            if j == last:
+                # Scatter scheduled rows back to (image, tile) order;
+                # ragged-padding rows fall into a dropped dump row.
+                target = jnp.where(ops.batch.oid >= 0, ops.batch.row_id,
+                                   n * t)
+                y_all = jnp.zeros((n * t + 1, tp, node.c_out), y.dtype)
+                flat = y_all.at[target].set(y)[:-1]
+            else:
+                flat = y                 # rows already in (img, tile) order
+        else:
+            pl_j = jax.vmap(lambda ti: tiles_to_plane(ti, grid, h, w))(
+                flat.reshape(n, t, tp, node.c_in))
+            yp = conv2d(pl_j, p["w"], p["b"])
+            if node.relu:
+                yp = jax.nn.relu(yp)
+            flat = jax.vmap(
+                lambda pj: plane_to_tiles(pj, grid))(yp).reshape(
+                    n * t, tp, node.c_out)
+        dispatches += 1
+    out = jax.vmap(lambda ti: tiles_to_plane(ti, grid, h, w))(
+        flat.reshape(n, t, tp, group.c_out))
+    return out, dispatches
+
+
+def _batch_fused_group_traces(
+    group: FusedGroup,
+    art: _BatchGroupArtifacts,
+    cfg: GraphConfig,
+    dtype_bytes: int,
+    group_idx: int,
+) -> list[GroupTrace]:
+    """Per-image GroupTraces of one batch-fused group — lazy host
+    assembly of the composite schedules, OFF the hot path."""
+    grid = art.grid
+    tp = grid.th * grid.tw
+    t = grid.num_tiles
+    tile_bytes = tp * group.c_in * dtype_bytes
+    traces = []
+    for i, bundle in enumerate(art.bundles):
+        sched = bundle.ds.to_host()
+        gt = GroupTrace(
+            grid=grid, tile_bytes=tile_bytes, buffer_tiles=art.m,
+            schedule=cfg.schedule, schedule_cache_hit=art.cache_hits[i],
+            schedule_backend=cfg.schedule_backend,
+            dispatch="batch_fused", batch_rows=(i * t, (i + 1) * t),
+            dtype_bytes=dtype_bytes, layer_channels=group.layer_channels,
+            output_bytes=grid.h * grid.w * group.c_out * dtype_bytes,
+            weight_bytes=group_weight_bytes(group, dtype_bytes),
+            b_layers=[np.asarray(b) for b in bundle.b_layers],
+            kernel_dispatches=0)
+        gt.image, gt.group = i, group_idx
+        gt.layer_stats = [LayerBufferStats(
+            kind=nd.kind,
+            tiles_computed=(len(sched.oid) if j == group.n_layers - 1
+                            and isinstance(nd, DeformNode) else t),
+            recomputes=0,
+            max_resident_bytes=t * tp * nd.c_out * dtype_bytes)
+            for j, nd in enumerate(group.nodes)]
+        for out_tile, loads in zip(sched.oid, sched.iid):
+            gt.records.append(TileRecord(
+                out_tile=out_tile, dep_tiles=tuple(loads),
+                loaded_bytes=len(loads) * tile_bytes,
+                buffer_bytes=len(loads) * tile_bytes))
+        traces.append(gt)
+    return traces
+
+
+def _run_graph_batch_fused(
+    convs: list,
+    segments: list[Segment],
+    x: jax.Array,
+    cfg: GraphConfig,
+    interpret: bool,
+    cache: ScheduleCache | None,
+    max_displacement: float | None,
+    trace: NetworkTrace,
+    return_trace: bool,
+) -> jax.Array:
+    """Batch-fused graph execution: the staging unit is a SEGMENT of the
+    whole batch (not an image) — segment s+1's batch prepass overlaps
+    segment s's execution on the staging thread."""
+    n = x.shape[0]
+    th, tw = cfg.tile_hw
+    itemsize = x.dtype.itemsize
+
+    deform_after = [False] * len(segments)
+    seen = False
+    for s in range(len(segments) - 1, -1, -1):
+        deform_after[s] = seen
+        if isinstance(segments[s], FusedGroup) and any(
+                isinstance(nd, DeformNode) for nd in segments[s].nodes):
+            seen = True
+
+    # The dense stage-1 chain state, advanced sequentially by the prepass
+    # (run_staged's single worker preserves submission order).
+    pre_state = {"plane": x}
+
+    def prepass(s: int):
+        seg = segments[s]
+        if isinstance(seg, (PoolNode, UpsampleNode)):
+            if deform_after[s]:
+                pre_state["plane"] = apply_boundary_batch(
+                    pre_state["plane"], seg)
+            return None
+        grid = TileGrid(seg.h, seg.w, min(th, seg.h), min(tw, seg.w))
+        m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
+        art, plane = _group_batch_prepass(
+            pre_state["plane"], seg, convs, grid, m, cfg, max_displacement,
+            cache, need_out_plane=deform_after[s], interp=interpret)
+        pre_state["plane"] = plane
+        return art
+
+    exec_state = {"plane": x, "group": 0}
+    pending: list[GroupTrace] = []
+
+    def execute(s: int, art):
+        seg = segments[s]
+        if art is None:
+            exec_state["plane"] = apply_boundary_batch(exec_state["plane"],
+                                                       seg)
+            trace.boundary_bytes += n * boundary_bytes(seg, itemsize)
+            return None
+        planes, dispatches = _exec_group_batch_fused(
+            exec_state["plane"], seg, convs, cfg, interpret, art)
+        exec_state["plane"] = planes
+        trace.batch_dispatches += dispatches
+        trace.overlap.schedule_s += art.schedule_s
+        trace.overlap.schedule_device_s += art.schedule_device_s
+        if return_trace:
+            pending.extend(_batch_fused_group_traces(
+                seg, art, cfg, itemsize, exec_state["group"]))
+        exec_state["group"] += 1
+        return None
+
+    run_staged(len(segments), prepass, execute, cfg.staging_depth,
+               trace.overlap)
+    # Keep trace.groups image-major like the per-image executors.
+    pending.sort(key=lambda g: (g.image, g.group))
+    trace.groups.extend(pending)
+    return exec_state["plane"]
+
+
 def run_graph(
     convs: list,
     graph: NetGraph,
@@ -662,6 +1050,12 @@ def run_graph(
     if n == 0:
         h, w, c = graph.out_shape
         y = jnp.zeros((0, h, w, c), x.dtype)
+        return (y, trace) if return_trace else y
+
+    if cfg.dispatch == "batch_fused":
+        y = _run_graph_batch_fused(convs, segments, x, cfg, interpret,
+                                   cache, max_displacement, trace,
+                                   return_trace)
         return (y, trace) if return_trace else y
 
     def prepass(i: int):

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import bli_coefficients
+from repro.core.scheduler import DeviceSchedule
 from repro.core.tiles import TileGrid
 
 
@@ -177,3 +178,119 @@ def pack_schedule_tiles(
         dep_tbl[n, :len(deps)] = deps
         dep_cnt[n] = len(deps)
     return dep_tbl, dep_cnt, idx, coeff
+
+
+# ---------------------------------------------------------------------------
+# Batch-fused packing: plane-ordered global-address operands + the
+# batch-stacking path (concatenated per-image schedules).
+# ---------------------------------------------------------------------------
+
+
+def pack_plane_operands(coords: jax.Array, grid: TileGrid, p_pad: int,
+                        ) -> tuple[jax.Array, jax.Array]:
+    """(idx, coeff) kernel operands for EVERY output tile, in plane order,
+    with PLANE-GLOBAL packed addresses ``tile_id * tile_pixels + offset``.
+
+    Unlike :func:`pack_output_tile`, the addresses do not depend on any
+    schedule's dep-slot assignment — the batch-fused kernel localises
+    them against the scalar-prefetched dep id per slot. That makes the
+    packing pure jnp on the sampling coordinates: with the device
+    scheduling backend the whole prepass stays on-device (zero host
+    round trip). Numerics match ``build_neighbour_tables`` +
+    ``pack_output_tile`` exactly (same Eq. 4/5 formulas).
+
+    coords: (H, W, KK, 2) -> idx/coeff (num_tiles, p_pad, KK, 4).
+    """
+    h, w, kk, _ = coords.shape
+    th, tw, rows, cols = grid.th, grid.tw, grid.rows, grid.cols
+    tp = th * tw
+
+    floor_rc, coeffs = bli_coefficients(coords)
+    r0 = jnp.clip(floor_rc[..., 0], 0, grid.h - 1)
+    c0 = jnp.clip(floor_rc[..., 1], 0, grid.w - 1)
+    r1 = jnp.clip(r0 + 1, 0, grid.h - 1)
+    c1 = jnp.clip(c0 + 1, 0, grid.w - 1)
+    nb_r = jnp.stack([r0, r0, r1, r1], axis=-1)            # (H, W, KK, 4)
+    nb_c = jnp.stack([c0, c1, c0, c1], axis=-1)
+    idx = ((nb_r // th) * cols + nb_c // tw) * tp \
+        + (nb_r % th) * tw + nb_c % tw
+
+    # Replicate-pad ragged edges; overhang output pixels carry coeff 0
+    # (their contribution is discarded on scatter) and address 0.
+    r_idx = jnp.minimum(jnp.arange(rows * th), h - 1)
+    c_idx = jnp.minimum(jnp.arange(cols * tw), w - 1)
+    valid = ((jnp.arange(rows * th) < h)[:, None]
+             & (jnp.arange(cols * tw) < w)[None, :])
+    idx_p = jnp.where(valid[..., None, None], idx[r_idx][:, c_idx], 0)
+    cf_p = coeffs[r_idx][:, c_idx] * valid[..., None, None]
+
+    def to_tiles(a):
+        a = a.reshape(rows, th, cols, tw, kk, 4)
+        a = a.transpose(0, 2, 1, 3, 4, 5).reshape(rows * cols, tp, kk, 4)
+        if p_pad != tp:
+            a = jnp.pad(a, ((0, 0), (0, p_pad - tp), (0, 0), (0, 0)))
+        return a
+
+    return (to_tiles(idx_p).astype(jnp.int32),
+            to_tiles(cf_p).astype(jnp.float32))
+
+
+class BatchDispatch(NamedTuple):
+    """Concatenated per-image schedules as batch-fused kernel operands.
+
+    One row per (image, schedule step) slot, images back to back with
+    per-image base offsets already applied (``img * t_out`` for output
+    rows, ``img * t_in`` for dep tiles). Ragged schedule lengths pad to
+    the uniform per-image row count with ``oid = -1`` / ``dep_cnt = 0``
+    slots whose dep entries repeat the image's last real dep (so the
+    kernel's clamped index map elides their DMAs across the image
+    boundary).
+    """
+
+    row_id: jax.Array    # (G,) int32 img*t_out + max(oid, 0)
+    dep_glb: jax.Array   # (G, k_pad) int32 img*t_in + dep (load order)
+    dep_cnt: jax.Array   # (G,) int32, 0 on padded slots
+    oid: jax.Array       # (G,) int32 concatenated oids, -1 on padding
+    img_id: jax.Array    # (G,) int32
+
+
+def pack_batch_schedules(scheds: list[DeviceSchedule], t_in: int,
+                         t_out: int) -> BatchDispatch:
+    """Batch-stacking path: concatenate per-image dense schedules into
+    one batch grid. Pure jnp over the ``DeviceSchedule`` arrays — device
+    schedules stay on-device end-to-end; host-built schedules (numpy
+    arrays) are uploaded as-is. All images must share the tile grid
+    (same uniform row count per image)."""
+    if not scheds:
+        raise ValueError("empty batch")
+    n_rows = scheds[0].n_rows
+    if any(s.n_rows != n_rows for s in scheds):
+        raise ValueError("per-image schedules disagree on row count — "
+                         "images in a batch must share the tile grid")
+    k_pad = max(s.k_pad for s in scheds)
+    rows, deps, cnts, oids, imgs = [], [], [], [], []
+    for i, s in enumerate(scheds):
+        oid_i = jnp.asarray(s.oid).reshape(-1)
+        dep_i = jnp.asarray(s.dep_tbl)
+        cnt_i = jnp.asarray(s.dep_cnt).reshape(-1)
+        if dep_i.shape[1] < k_pad:
+            dep_i = jnp.pad(dep_i,
+                            ((0, 0), (0, k_pad - dep_i.shape[1])))
+        valid = oid_i >= 0
+        # Padded suffix rows repeat the image's last real dep so their
+        # (skipped) grid steps issue no fresh DMA.
+        last_row = jnp.maximum(jnp.sum(valid) - 1, 0)
+        last_dep = dep_i[last_row,
+                         jnp.maximum(cnt_i[last_row] - 1, 0)]
+        dep_i = jnp.where(valid[:, None], dep_i, last_dep)
+        rows.append(i * t_out + jnp.maximum(oid_i, 0))
+        deps.append(i * t_in + dep_i)
+        cnts.append(cnt_i)
+        oids.append(oid_i)
+        imgs.append(jnp.full((n_rows,), i, jnp.int32))
+    return BatchDispatch(
+        row_id=jnp.concatenate(rows).astype(jnp.int32),
+        dep_glb=jnp.concatenate(deps).astype(jnp.int32),
+        dep_cnt=jnp.concatenate(cnts).astype(jnp.int32),
+        oid=jnp.concatenate(oids).astype(jnp.int32),
+        img_id=jnp.concatenate(imgs))

@@ -39,15 +39,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import DeformableConvParams, conv2d, offsets_to_coords
-from repro.core.scheduler import (TileSchedule, schedule_tiles,
+from repro.core.scheduler import (DeviceSchedule, TileSchedule, pow2_pad,
+                                  schedule_arrays_device, schedule_tiles,
                                   sequential_schedule)
 from repro.core.tiles import TileGrid, tdt_from_coords
-from repro.kernels.dcn_fused import dcn_fused_schedule, dcn_fused_tile
+from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
+                                     dcn_fused_tile)
 from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.kernels.ops import round_up
 from repro.runtime.cache import coords_digest, default_schedule_cache
 from repro.runtime.packing import (NeighbourTables, build_neighbour_tables,
-                                   pack_output_tile, pack_schedule_tiles,
+                                   pack_batch_schedules, pack_output_tile,
+                                   pack_plane_operands, pack_schedule_tiles,
                                    plane_to_tiles, tiles_to_plane)
 from repro.runtime.trace import ImageTrace, PipelineTrace, TileRecord
 
@@ -107,7 +110,7 @@ def validate_dispatch_config(cfg) -> None:
     """Shared ``__post_init__`` checks of the executor configs: tile
     sides, dispatch mode, schedule backend and staging depth."""
     cfg.tile_hw                          # validates tile sides
-    if cfg.dispatch not in ("batched", "per_tile"):
+    if cfg.dispatch not in ("batched", "per_tile", "batch_fused"):
         raise ValueError(f"unknown dispatch mode: {cfg.dispatch!r}")
     if cfg.schedule_backend not in ("host", "device"):
         raise ValueError(
@@ -138,7 +141,11 @@ class PipelineConfig:
     block_p: int = 128                   # kernel pixel-block size
     interpret: bool | None = None        # Pallas interpret; None = auto
     use_schedule_cache: bool = True      # LRU-cache TDT+Algorithm-1 builds
-    # "batched": the whole schedule as one pallas_call grid.
+    # "batched": the whole schedule as one pallas_call grid (per image).
+    # "batch_fused": the concatenated schedules of ALL batch images as
+    #   one pallas_call grid — one dispatch per layer segment per BATCH,
+    #   and with schedule_backend="device" the schedule arrays feed the
+    #   dispatch directly (no host TileSchedule on the hot path).
     # "per_tile": one kernel dispatch per schedule entry (PR 1).
     dispatch: str = "batched"
     # "host": TDT scatter + Algorithm-1 loop in host numpy/Python.
@@ -303,6 +310,160 @@ def _pipeline_exec(
     return y, trace
 
 
+# ---------------------------------------------------------------------------
+# Batch-fused dispatch: ONE kernel call for the whole batch's schedules.
+# ---------------------------------------------------------------------------
+
+
+def build_dense_schedule(coords_i, grid: TileGrid, m: int, cfg, interp: bool,
+                         cache) -> tuple[DeviceSchedule, bool | None]:
+    """One image's schedule in dense dispatch form (cached).
+
+    With ``schedule_backend="device"`` (and the default alg1 schedule)
+    the TDT scatter, greedy selection, and the schedule->dispatch
+    handoff all run on-device — the returned arrays are device arrays
+    and NO host ``TileSchedule`` is built. The host backend (and the
+    sequential ablation) builds the classic schedule and densifies it.
+    """
+
+    def build() -> DeviceSchedule:
+        if cfg.schedule_backend == "device" and cfg.schedule == "alg1":
+            B = tdt_from_coords_device(coords_i, grid, grid,
+                                       interpret=interp)
+            return schedule_arrays_device(B, m, interpret=interp)
+        if cfg.schedule_backend == "device":
+            B = np.asarray(tdt_from_coords_device(coords_i, grid, grid,
+                                                  interpret=interp))
+        else:
+            B = np.asarray(tdt_from_coords(coords_i, grid, grid))
+        if cfg.schedule == "alg1":
+            sched = schedule_tiles(B, m)
+        elif cfg.schedule == "sequential":
+            sched = sequential_schedule(B)
+        else:
+            raise ValueError(f"unknown schedule: {cfg.schedule!r}")
+        return DeviceSchedule.from_host(sched, grid.num_tiles)
+
+    if cache is None:
+        return build(), None
+    # Same digest as the per-image paths plus a "dense" discriminator:
+    # the cached artifact type differs from the TileSchedule entries.
+    key = (coords_digest(coords_i, grid), grid.th, grid.tw, m,
+           cfg.schedule, "dense")
+    return cache.get_or_build(key, build)
+
+
+@dataclasses.dataclass
+class _BatchArtifacts:
+    """Prepass products of one whole batch (batch-fused dispatch)."""
+
+    scheds: list[DeviceSchedule]
+    cache_hits: list[bool | None]
+    batch: object                 # packing.BatchDispatch
+    idx: jax.Array                # (N*T, p_pad, KK, 4) plane-global
+    coeff: jax.Array              # (N*T, p_pad, KK, 4)
+    schedule_s: float = 0.0
+    schedule_device_s: float = 0.0
+
+
+def _pipeline_batch_prepass(
+    coords: jax.Array,            # (N, H, W, KK, 2)
+    grid: TileGrid,
+    m: int,
+    p_pad: int,
+    cfg: PipelineConfig,
+    interp: bool,
+) -> _BatchArtifacts:
+    """Whole-batch prepass: per-image dense schedules (cached; partial
+    batch hits skip scheduling for the hit images) concatenated into one
+    batch grid, plus the plane-ordered packed operands — all jnp, so the
+    device scheduling backend keeps the hot path host-free."""
+    n = coords.shape[0]
+    cache = default_schedule_cache() if cfg.use_schedule_cache else None
+    t0 = time.perf_counter()
+    scheds, hits = [], []
+    for i in range(n):
+        ds, hit = build_dense_schedule(coords[i], grid, m, cfg, interp,
+                                       cache)
+        scheds.append(ds)
+        hits.append(hit)
+    batch = pack_batch_schedules(scheds, grid.num_tiles, grid.num_tiles)
+    schedule_s = time.perf_counter() - t0
+    if cache is not None:
+        cache.note_batch_assembly(sum(bool(h) for h in hits))
+
+    idx, coeff = jax.vmap(
+        lambda c: pack_plane_operands(c, grid, p_pad))(coords)
+    kk = coords.shape[3]
+    idx = idx.reshape(n * grid.num_tiles, p_pad, kk, 4)
+    coeff = coeff.reshape(n * grid.num_tiles, p_pad, kk, 4)
+    device = cfg.schedule_backend == "device" and cfg.schedule == "alg1"
+    return _BatchArtifacts(
+        scheds=scheds, cache_hits=hits, batch=batch, idx=idx, coeff=coeff,
+        schedule_s=schedule_s,
+        schedule_device_s=schedule_s if device else 0.0)
+
+
+def _pipeline_batch_exec(
+    x: jax.Array,                 # (N, H, W, C_in)
+    art: _BatchArtifacts,
+    w2: jax.Array,
+    b: jax.Array,
+    kernel_size: int,
+    cfg: PipelineConfig,
+    grid: TileGrid,
+    m: int,
+    interp: bool,
+    trace: PipelineTrace,
+    return_trace: bool,
+) -> jax.Array:
+    n, h, w = x.shape[0], x.shape[1], x.shape[2]
+    c = x.shape[3]
+    tp = grid.th * grid.tw
+    t = grid.num_tiles
+    c_out = w2.shape[-1]
+
+    x_tiles = jax.vmap(lambda p: plane_to_tiles(p, grid))(x)  # (N, T, tp, C)
+    y_rows = dcn_fused_batch(
+        x_tiles.reshape(n * t, tp, c), art.batch.row_id, art.batch.dep_glb,
+        art.batch.dep_cnt, art.idx, art.coeff, w2, b,
+        t_in=t, kernel_size=kernel_size, block_p=cfg.block_p,
+        interpret=interp)[:, :tp]
+    # Scatter valid rows back to (image, tile) order; ragged-padding rows
+    # land in a dump row that is dropped.
+    target = jnp.where(art.batch.oid >= 0, art.batch.row_id, n * t)
+    y_all = jnp.zeros((n * t + 1, tp, c_out), x.dtype)
+    y_all = y_all.at[target].set(y_rows.astype(x.dtype))
+    y_tiles = y_all[:-1].reshape(n, t, tp, c_out)
+    y = jax.vmap(lambda yt: tiles_to_plane(yt, grid, h, w))(y_tiles)
+
+    trace.batch_dispatches += 1
+    tile_bytes = tp * c * x.dtype.itemsize
+    for i in range(n):
+        im = ImageTrace(grid=grid, tile_bytes=tile_bytes, buffer_tiles=m,
+                        schedule=cfg.schedule,
+                        schedule_cache_hit=art.cache_hits[i],
+                        dispatch="batch_fused",
+                        schedule_backend=cfg.schedule_backend,
+                        batch_rows=(i * t, (i + 1) * t))
+        if return_trace:
+            # Lazy host assembly — traces/cross-checks only, never the
+            # hot path (asserted by the prepass-instrumentation test).
+            # buffer_bytes uses the schedule's own padded dep count (as
+            # the per-image batched path does), NOT DeviceSchedule.k_pad
+            # — the device handoff pads that to pow2_pad(num_tiles).
+            sched = art.scheds[i].to_host()
+            k_pad = pow2_pad(max((len(d) for d in sched.iid), default=1))
+            buffer_bytes = k_pad * tp * c * x.dtype.itemsize
+            for out_tile, deps in zip(sched.oid, sched.iid):
+                im.records.append(TileRecord(
+                    out_tile=out_tile, dep_tiles=tuple(deps),
+                    loaded_bytes=len(deps) * tile_bytes,
+                    buffer_bytes=buffer_bytes))
+        trace.images.append(im)
+    return y
+
+
 def dcn_pipeline(
     x: jax.Array,
     params: DeformableConvParams,
@@ -364,6 +525,20 @@ def dcn_pipeline(
     bp = min(cfg.block_p, tp)
     p_pad = tp if tp % bp == 0 else round_up(tp, cfg.block_p)
     interp = resolve_interpret(cfg.interpret)
+
+    if cfg.dispatch == "batch_fused":
+        # Batch-level prepass replaces the per-image staging loop: the
+        # whole batch's schedules concatenate into ONE kernel dispatch.
+        t0 = time.perf_counter()
+        art = _pipeline_batch_prepass(coords, grid, m, p_pad, cfg, interp)
+        dur = time.perf_counter() - t0
+        trace.overlap.prepass_s += dur
+        trace.overlap.prepass_wait_s += dur
+        trace.overlap.schedule_s += art.schedule_s
+        trace.overlap.schedule_device_s += art.schedule_device_s
+        y = _pipeline_batch_exec(x, art, w2, params.b, kernel_size, cfg,
+                                 grid, m, interp, trace, return_trace)
+        return (y, trace) if return_trace else y
 
     def prepass(i: int) -> _ImageArtifacts:
         return _pipeline_prepass(coords[i], grid, m, p_pad, cfg, interp)

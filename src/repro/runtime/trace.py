@@ -43,12 +43,21 @@ class ImageTrace:
     schedule_cache_hit: bool | None = None
     # Kernel-dispatch accounting: host-issued compute dispatches (fused
     # Pallas calls + halo convs). Per-tile dispatch pays one per schedule
-    # entry; batched grid dispatch pays one per layer segment.
+    # entry; batched grid dispatch pays one per layer segment; batch-fused
+    # dispatches are shared by the whole batch and counted ONCE on the
+    # enclosing PipelineTrace/NetworkTrace (``batch_dispatches``), so this
+    # stays 0 for "batch_fused" images.
     kernel_dispatches: int = 0
-    dispatch: str = "per_tile"   # "per_tile" | "batched"
+    dispatch: str = "per_tile"   # "per_tile" | "batched" | "batch_fused"
     # Which scheduler built this image's TDT + Algorithm-1 order:
     # "host" = numpy reference loop, "device" = Pallas kernels.
     schedule_backend: str = "host"
+    # batch-fused dispatch only: this image's (start, stop) row span in
+    # the concatenated batch grid — its per-image slice of the single
+    # fused dispatch. Grid order within the span is the image's own
+    # schedule order, so ``records`` (and the simulator cross-check)
+    # are unchanged vs per-image dispatch.
+    batch_rows: tuple[int, int] | None = None
 
     @property
     def packed_tile_loads(self) -> int:
@@ -115,6 +124,9 @@ class PipelineTrace:
 
     images: list[ImageTrace] = field(default_factory=list)
     overlap: OverlapSpans = field(default_factory=OverlapSpans)
+    # Batch-fused dispatches: kernel calls shared by the WHOLE batch
+    # (one per layer segment), counted here instead of per image.
+    batch_dispatches: int = 0
 
     @property
     def packed_bytes(self) -> int:
@@ -122,7 +134,14 @@ class PipelineTrace:
 
     @property
     def kernel_dispatches(self) -> int:
-        return sum(im.kernel_dispatches for im in self.images)
+        return (self.batch_dispatches
+                + sum(im.kernel_dispatches for im in self.images))
+
+    @property
+    def dispatches_per_batch(self) -> int:
+        """Host-issued dispatches of this call — for batch-fused mode the
+        whole call is one batch, so this equals ``kernel_dispatches``."""
+        return self.kernel_dispatches
 
     @property
     def host_overlap_frac(self) -> float:
@@ -212,10 +231,20 @@ class NetworkTrace:
     groups: list[GroupTrace] = field(default_factory=list)
     boundary_bytes: int = 0      # pool/upsample plane read+write traffic
     overlap: OverlapSpans = field(default_factory=OverlapSpans)
+    # Batch-fused dispatches: kernel calls shared by the WHOLE batch
+    # (one per layer segment), counted here instead of per group trace.
+    batch_dispatches: int = 0
 
     @property
     def kernel_dispatches(self) -> int:
-        return sum(g.kernel_dispatches for g in self.groups)
+        return (self.batch_dispatches
+                + sum(g.kernel_dispatches for g in self.groups))
+
+    @property
+    def dispatches_per_batch(self) -> int:
+        """Host-issued dispatches of this call — for batch-fused mode the
+        whole call is one batch, so this equals ``kernel_dispatches``."""
+        return self.kernel_dispatches
 
     @property
     def host_overlap_frac(self) -> float:

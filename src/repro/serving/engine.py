@@ -185,7 +185,15 @@ class DcnServingEngine:
 
     @property
     def stats(self) -> dict[str, Any]:
-        """Serving counters: schedule-cache hit/miss + dispatch/overlap."""
+        """Serving counters: schedule-cache hit/miss + dispatch/overlap.
+
+        With ``graph=GraphConfig(dispatch="batch_fused")`` the cache is
+        keyed per image but the dispatch grid is assembled per batch:
+        ``image_hits``/``batch_assemblies`` split the hit accounting
+        (partial batch hits skip scheduling only for the hit images),
+        and ``dispatches_per_batch`` reports the average host-issued
+        kernel dispatches per served request batch.
+        """
         info = self.cache.info()
         total = info["hits"] + info["misses"]
         return {
@@ -196,9 +204,14 @@ class DcnServingEngine:
             "schedule_cache_hit_rate": (info["hits"] / total
                                         if total else 0.0),
             "schedule_cache_size": info["size"],
+            "image_hits": info["image_hits"],
+            "batch_assemblies": info["batch_assemblies"],
             "kernel_dispatches": self.kernel_dispatches,
+            "dispatches_per_batch": (self.kernel_dispatches / self.requests
+                                     if self.requests else 0.0),
             "host_overlap_frac": self.overlap.host_overlap_frac,
             "schedule_backend": self.graph_cfg.schedule_backend,
+            "dispatch": self.graph_cfg.dispatch,
             "schedule_s": self.overlap.schedule_s,
             "schedule_device_frac": self.overlap.schedule_device_frac,
         }

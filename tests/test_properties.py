@@ -127,6 +127,52 @@ class TestDeviceSchedulerProperties:
         assert loads(dev) == loads(host)
 
 
+class TestBatchFusedProperties:
+    """The concatenated batch grid preserves every image's schedule: its
+    per-image FIFO DRAM loads equal the sum of the per-image simulator
+    (host Algorithm-1 + FIFO replay) loads, for arbitrary ragged TDTs."""
+
+    @given(n_imgs=st.integers(1, 4), n=st.integers(2, 12),
+           density=st.floats(0.0, 0.9), m=st.integers(1, 12),
+           seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_concat_fifo_loads_equal_sum_of_simulator_loads(
+            self, n_imgs, n, density, m, seed):
+        from repro.core.scheduler import DeviceSchedule
+        from repro.runtime.packing import pack_batch_schedules
+
+        rng = np.random.default_rng(seed)
+        tdts = [rng.random((n, n)) < density for _ in range(n_imgs)]
+        scheds = [schedule_tiles(B, m) for B in tdts]
+        batch = pack_batch_schedules(
+            [DeviceSchedule.from_host(s, n) for s in scheds], n, n)
+
+        def replay(s):
+            buf = FifoBuffer(m)
+            for loads in s.iid:
+                for t in loads:
+                    buf.touch(t)
+            return buf.loads
+
+        sim_total = sum(replay(s) for s in scheds)
+
+        # Replay the concatenated dep rows through per-image FIFOs —
+        # exactly the DMA stream the batch-fused grid issues (ragged
+        # padding rows carry dep_cnt 0 and load nothing new beyond the
+        # elided repeat of the image's last resident dep).
+        oid = np.asarray(batch.oid)
+        dep = np.asarray(batch.dep_glb)
+        cnt = np.asarray(batch.dep_cnt)
+        bufs = [FifoBuffer(m) for _ in range(n_imgs)]
+        for g in range(oid.shape[0]):
+            if oid[g] < 0:
+                continue
+            img = g // n
+            for k in range(cnt[g]):
+                bufs[img].touch(int(dep[g, k]) - img * n)
+        assert sum(b.loads for b in bufs) == sim_total
+
+
 class TestBliProperties:
     @given(seed=st.integers(0, 10_000), h=st.integers(4, 16),
            w=st.integers(4, 16))
