@@ -1,8 +1,9 @@
 """Benchmark smoke driver: tiny configs -> ``BENCH_*.json`` artifacts.
 
-Runs bench_scheduling, bench_fusion and bench_graph on configurations
-small enough for a CPU CI worker (a couple of minutes total) and writes
-one JSON file per benchmark so the CI can archive the perf trajectory:
+Runs bench_scheduling, bench_fusion, bench_graph and bench_serving on
+configurations small enough for a CPU CI worker (a couple of minutes
+total) and writes one JSON file per benchmark so the CI can archive the
+perf trajectory:
 
   PYTHONPATH=src python benchmarks/smoke.py --out bench-artifacts
 
@@ -21,10 +22,16 @@ the CI bench-smoke job) if:
   * batch-fused dispatch (batch=4) does not hit exactly ONE kernel
     dispatch per layer segment, or disagrees numerically with per-image
     batched dispatch on either scheduling backend (ISSUE 5 gate);
+  * continuous-batching serving (slot pool >= 4) does not beat the
+    serve-one-at-a-time baseline by >= 1.5x requests/sec on the
+    open-loop arrival benchmark (ISSUE 6 gate — BENCH_serving.json
+    carries the p50/p95/p99 latencies of both modes);
   * ``--compare BASELINE_DIR`` is given (previous main-branch
     ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or a
     dispatch count (batched per-image, or batch-fused at batch>1)
-    regress more than 10% against the baseline.
+    regress more than 10% against the baseline, or serving requests/sec
+    drops more than 10% below it (direction-aware: rps is
+    higher-is-better).
 """
 
 from __future__ import annotations
@@ -39,7 +46,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:          # allow `python benchmarks/smoke.py`
     sys.path.insert(0, _ROOT)
 
-from benchmarks import bench_fusion, bench_graph, bench_scheduling
+from benchmarks import (bench_fusion, bench_graph, bench_scheduling,
+                        bench_serving)
 
 TINY_TDT = dict(h=16, w=16, c=16, tiles_per_side=4)
 
@@ -79,15 +87,20 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
     main-branch artifacts. A missing baseline (first run, expired
     artifact) is a warning, not a failure."""
     rc = 0
+    # direction "lower": regression is new > base*1.10 (counts, loads);
+    # direction "higher": regression is new < base*0.90 (requests/sec).
     checks = [
         ("BENCH_scheduling.json", "scheduled DRAM tile loads",
-         lambda p: int(_record(p, "fig16_layer")["scheduled_loads"])),
+         lambda p: int(_record(p, "fig16_layer")["scheduled_loads"]),
+         "lower"),
         ("BENCH_graph.json", "batched dispatch count",
-         lambda p: int(p["dispatch_count"])),
+         lambda p: int(p["dispatch_count"]), "lower"),
         ("BENCH_graph.json", "batch-fused dispatch count (batch>1)",
-         lambda p: int(p["batch_fused_dispatch_count"])),
+         lambda p: int(p["batch_fused_dispatch_count"]), "lower"),
+        ("BENCH_serving.json", "serving requests/sec (batched)",
+         lambda p: float(p["serving_batched_rps"]), "higher"),
     ]
-    for fname, what, extract in checks:
+    for fname, what, extract, direction in checks:
         path = os.path.join(baseline_dir, fname)
         if not os.path.exists(path):
             print(f"WARNING: no baseline {path}; skipping {what} check")
@@ -108,11 +121,16 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
                   f"({e})")
             rc = 1
             continue
-        limit = base * 1.10
-        verdict = "REGRESSED" if new > limit else "ok"
+        if direction == "higher":
+            limit = base * 0.90
+            regressed = new < limit
+        else:
+            limit = base * 1.10
+            regressed = new > limit
+        verdict = "REGRESSED" if regressed else "ok"
         print(f"bench-regression: {what} new={new} baseline={base} "
               f"(limit {limit:.1f}) -> {verdict}")
-        if new > limit:
+        if regressed:
             rc = 1
     return rc
 
@@ -155,6 +173,10 @@ def main(argv=None) -> int:
                                             batch=4, repeats=2)),
             (bench_graph.run_model_backend, dict(img=16, n_deform=2,
                                                  width_mult=0.125, tile=4)),
+        ]),
+        "BENCH_serving.json": _collect("serving", [
+            (bench_serving.run, dict(img=13, n_deform=2, width_mult=0.125,
+                                     tile=4, slots=8, n_requests=16)),
         ]),
     }
 
@@ -255,6 +277,35 @@ def main(argv=None) -> int:
             print(f"ERROR: pipeline batch-fused dispatches "
                   f"({r['dispatches_per_batch']}) not below per-image "
                   f"batched ({r['batched_dispatches']})")
+            rc = 1
+
+    # Continuous-batching serving gate (ISSUE 6 acceptance): with a slot
+    # pool >= 4, coalesced batch-fused serving must beat the sequential
+    # serve-one-at-a-time baseline by >= 1.5x requests/sec on the
+    # open-loop arrival benchmark; latency percentiles are archived for
+    # the perf trajectory.
+    serving_payload = suites["BENCH_serving.json"]
+    sv = _record(serving_payload, "serving_bench")
+    if sv is None:
+        print("ERROR: serving_bench record missing from bench_serving")
+        rc = 1
+    else:
+        speedup = float(sv["speedup"])
+        serving_payload["serving_slots"] = int(sv["slots"])
+        serving_payload["serving_speedup"] = speedup
+        serving_payload["serving_batched_rps"] = float(sv["batched_rps"])
+        serving_payload["serving_sequential_rps"] = float(sv["seq_rps"])
+        for r in serving_payload["records"]:
+            if r["label"] == "serving_latency":
+                for q in ("p50_s", "p95_s", "p99_s"):
+                    serving_payload[f"serving_{r['mode']}_{q}"] = float(
+                        r[q])
+        if sv["batched_beats_sequential"] != "yes":
+            print("ERROR: batched serving does not beat sequential infer")
+            rc = 1
+        if int(sv["slots"]) >= 4 and speedup < 1.5:
+            print(f"ERROR: serving speedup {speedup:.2f}x < 1.5x at "
+                  f"slot pool {sv['slots']}")
             rc = 1
 
     if args.compare:

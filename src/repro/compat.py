@@ -1,0 +1,67 @@
+"""Pinned-vs-latest jax API shims.
+
+CI pins ``jax==0.4.37`` (the oldest supported leg) while the latest-jax
+legs track current releases, and a few collective/mesh APIs moved
+between the two:
+
+* ``jax.shard_map`` — top-level alias of
+  ``jax.experimental.shard_map.shard_map`` on recent jax; only the
+  experimental path exists on 0.4.37 (where replication checking is the
+  legacy ``check_rep`` analysis — disabled here to match the manual
+  ``pvary`` annotations the new API expects instead).
+* ``jax.lax.pvary`` — explicit "this value varies over these axes"
+  annotation required by the new varying-manual-axes checker; a no-op
+  on jax versions without the checker.
+* ``jax.lax.axis_size`` — collective axis size inside manual regions;
+  the 0.4.37 equivalent is the classic ``psum(1, axis)``.
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(axis_types=...)`` — the
+  explicit-sharding mesh axis types; 0.4.37 meshes are implicitly Auto,
+  so the kwarg is simply dropped there.
+
+Everything importing these symbols goes through this module so the
+version split lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["axis_size", "make_mesh", "pvary", "shard_map"]
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports
+    them (they are the implicit default on older jax)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        # check_rep=False: the legacy replication analysis predates
+        # pvary and rejects the manual-psum patterns the new checker
+        # (given pvary annotations) accepts.
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    def pvary(x, axis_name):
+        return x
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)

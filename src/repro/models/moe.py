@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pvary, shard_map
 from repro.models.params import Maker
 
 
@@ -266,17 +267,17 @@ def moe_apply(p, cfg: MoeConfig, x, *, mesh: jax.sharding.Mesh | None = None,
             else:
                 out = psum(routed.astype(jnp.float32) + shared)
             out = out.astype(x_loc.dtype)
-            aux = jax.lax.pvary(aux, (dp + (ep_axis,)) if tp_f
+            aux = pvary(aux, (dp + (ep_axis,)) if tp_f
                                 else (ep_axis,))
             return out, jax.lax.pmean(aux, all_axes)
 
         out, aux = _moe_core(p_loc, cfg, x_loc, rank=rank,
                              wgather=wgather, psum=psum)
-        aux = jax.lax.pvary(aux, (dp + (ep_axis,)) if tp_f
+        aux = pvary(aux, (dp + (ep_axis,)) if tp_f
                             else (ep_axis,))
         return out, jax.lax.pmean(aux, all_axes)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(wspec, batch_spec),
         out_specs=(batch_spec, P()),

@@ -40,6 +40,7 @@ from repro.runtime.graph import (
     UpsampleNode,
     build_graph,
     partition_graph,
+    partition_graph_cached,
 )
 from repro.runtime.packing import (
     BatchDispatch,
@@ -60,6 +61,7 @@ from repro.runtime.pipeline import (
 from repro.runtime.trace import (
     GroupTrace,
     ImageTrace,
+    LatencyStats,
     LayerBufferStats,
     NetworkTrace,
     OverlapSpans,
@@ -94,8 +96,10 @@ __all__ = [
     "UpsampleNode",
     "build_graph",
     "partition_graph",
+    "partition_graph_cached",
     "GroupTrace",
     "ImageTrace",
+    "LatencyStats",
     "LayerBufferStats",
     "NetworkTrace",
     "OverlapSpans",

@@ -71,7 +71,11 @@ class ScheduleCache:
         # Batch-fused accounting: per-image lookups inside a batch
         # assembly (a partial batch hit = some images skip scheduling
         # while the misses are built and spliced into the batch grid).
+        # ``image_lookups`` counts every per-image membership check so
+        # the hit accounting stays a rate even when a serving engine
+        # coalesces dynamically sized slot batches.
         self.image_hits = 0
+        self.image_lookups = 0
         self.batch_assemblies = 0
 
     def __len__(self) -> int:
@@ -104,12 +108,23 @@ class ScheduleCache:
         self.put(key, value)
         return value, False
 
-    def note_batch_assembly(self, image_hits: int) -> None:
-        """Record one batch-grid assembly and how many of its images were
-        served from the cache (partial batch hits)."""
+    def note_batch_assembly(self, image_hits: int,
+                            images: int = 0) -> None:
+        """Record one batch-grid assembly: how many of its ``images``
+        were served from the cache (partial batch hits)."""
         with self._lock:
             self.batch_assemblies += 1
             self.image_hits += int(image_hits)
+            self.image_lookups += int(images)
+
+    @property
+    def image_hit_rate(self) -> float:
+        """Per-image hit rate across batch assemblies (coalesced slot
+        batches count each admitted image once)."""
+        with self._lock:
+            if not self.image_lookups:
+                return 0.0
+            return self.image_hits / self.image_lookups
 
     def clear(self) -> None:
         with self._lock:
@@ -117,6 +132,7 @@ class ScheduleCache:
             self.hits = 0
             self.misses = 0
             self.image_hits = 0
+            self.image_lookups = 0
             self.batch_assemblies = 0
 
     def info(self) -> dict[str, int]:
@@ -124,6 +140,7 @@ class ScheduleCache:
             return {"size": len(self._entries), "maxsize": self.maxsize,
                     "hits": self.hits, "misses": self.misses,
                     "image_hits": self.image_hits,
+                    "image_lookups": self.image_lookups,
                     "batch_assemblies": self.batch_assemblies}
 
 

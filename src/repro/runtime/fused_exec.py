@@ -69,7 +69,8 @@ from repro.runtime.cache import (ScheduleCache, chain_digest, conv_digest,
                                  coords_digest, default_schedule_cache)
 from repro.runtime.graph import (DeformNode, FusedGroup, NetGraph, PoolNode,
                                  Segment, UpsampleNode, boundary_bytes,
-                                 group_weight_bytes, partition_graph)
+                                 group_weight_bytes,
+                                 partition_graph_cached)
 from repro.runtime.packing import (build_neighbour_tables,
                                    pack_batch_schedules, pack_output_tile,
                                    pack_plane_operands, pack_schedule_tiles,
@@ -790,7 +791,8 @@ def _group_batch_prepass(
         hits.append(hit)
     schedule_s = time.perf_counter() - t0
     if cache is not None:
-        cache.note_batch_assembly(sum(bool(h) for h in hits))
+        cache.note_batch_assembly(sum(bool(h) for h in hits),
+                                  images=len(hits))
 
     layer_ops: list[_BatchLayerOps | None] = []
     for j, node in enumerate(group.nodes):
@@ -1042,8 +1044,8 @@ def run_graph(
         cache: ScheduleCache | None = schedule_cache
     else:
         cache = default_schedule_cache() if cfg.use_schedule_cache else None
-    segments = partition_graph(graph, cfg.onchip_budget_bytes,
-                               dtype_bytes=x.dtype.itemsize)
+    segments = partition_graph_cached(graph, cfg.onchip_budget_bytes,
+                                      dtype_bytes=x.dtype.itemsize)
 
     trace = NetworkTrace()
     n = x.shape[0]

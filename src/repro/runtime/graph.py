@@ -21,6 +21,7 @@ Execution lives in ``runtime.fused_exec``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import TYPE_CHECKING, Union
 
 from repro.core.fusion import GroupPlan, LayerShape, plan_fused_groups
@@ -255,3 +256,23 @@ def partition_graph(graph: NetGraph, onchip_budget_bytes: int,
             run.append(node)
     flush()
     return segments
+
+
+@functools.lru_cache(maxsize=64)
+def _partition_cached(graph: NetGraph, onchip_budget_bytes: int,
+                      dtype_bytes: int) -> tuple[Segment, ...]:
+    return tuple(partition_graph(graph, onchip_budget_bytes, dtype_bytes))
+
+
+def partition_graph_cached(graph: NetGraph, onchip_budget_bytes: int,
+                           dtype_bytes: int = 4) -> list[Segment]:
+    """Memoized :func:`partition_graph` for serving hot paths.
+
+    ``NetGraph`` is a frozen dataclass of frozen nodes, so the (graph,
+    budget, dtype) triple is hashable and the §IV-D planner sweep — a
+    pure function of it — runs once per distinct deployment instead of
+    once per request step. Segments are frozen too; sharing them across
+    calls is safe.
+    """
+    return list(_partition_cached(graph, int(onchip_budget_bytes),
+                                  int(dtype_bytes)))

@@ -390,7 +390,8 @@ def _pipeline_batch_prepass(
     batch = pack_batch_schedules(scheds, grid.num_tiles, grid.num_tiles)
     schedule_s = time.perf_counter() - t0
     if cache is not None:
-        cache.note_batch_assembly(sum(bool(h) for h in hits))
+        cache.note_batch_assembly(sum(bool(h) for h in hits),
+                                  images=len(hits))
 
     idx, coeff = jax.vmap(
         lambda c: pack_plane_operands(c, grid, p_pad))(coords)

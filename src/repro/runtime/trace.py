@@ -87,6 +87,47 @@ class ImageTrace:
 
 
 @dataclass
+class LatencyStats:
+    """Per-request latency accounting of a serving engine.
+
+    Samples are submit->result wall seconds (queueing delay + every
+    serving step the request waited through + its own service time), so
+    the tail percentiles reflect what a client actually observes under
+    the arrival process — the serving counterpart of the per-call
+    ``OverlapSpans``.
+    """
+
+    samples_s: list[float] = field(default_factory=list)
+
+    def add(self, latency_s: float) -> None:
+        self.samples_s.append(float(latency_s))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples_s)
+
+    @property
+    def mean_s(self) -> float:
+        return float(np.mean(self.samples_s)) if self.samples_s else 0.0
+
+    def percentile_s(self, q: float) -> float:
+        """q-th percentile latency in seconds (0 with no samples)."""
+        if not self.samples_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.samples_s), q))
+
+    def summary(self) -> dict:
+        """The stats block serving engines and benchmarks report."""
+        return {
+            "count": self.count,
+            "mean_s": self.mean_s,
+            "p50_s": self.percentile_s(50.0),
+            "p95_s": self.percentile_s(95.0),
+            "p99_s": self.percentile_s(99.0),
+        }
+
+
+@dataclass
 class OverlapSpans:
     """Host-prepass vs device-execution overlap accounting of one executor
     call (the multi-image staging queue): how much of the host-side

@@ -1,1 +1,2 @@
-from repro.serving.engine import DcnServingEngine, DecodeEngine, Request
+from repro.serving.engine import (DcnRequest, DcnServingEngine, DecodeEngine,
+                                  Request)

@@ -16,14 +16,24 @@ prefill path.
 executor (``backend="graph"``) with a per-engine schedule cache: replayed
 requests whose quantized sampling coordinates match a previous request
 skip the host-side TDT + Algorithm-1 rebuild entirely, so steady-state
-serving pays only the batched kernel dispatches. ``stats`` exposes the
-cache hit rate and dispatch/overlap counters.
+serving pays only the batched kernel dispatches. It is a continuous-
+batching service in the same shape as ``DecodeEngine``: ``submit()``
+enqueues image requests from any thread, ``step()`` admits queued images
+into a fixed pool of slots and serves every occupied slot with ONE
+``batch_fused`` ragged grid per layer segment — concurrent single-image
+requests coalesce into one dispatch, and a large request's images can
+split across steps. ``stats`` exposes the cache hit rate,
+dispatch/overlap counters and submit->result latency percentiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +78,10 @@ class DecodeEngine:
             lambda p, c, t, pos: lm.lm_decode_step(p, cfg, c, t, pos, ctx))
 
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — decoding needs at "
+                "least one prompt token to seed the first step")
         self.queue.append(req)
 
     def _admit(self):
@@ -80,10 +94,18 @@ class DecodeEngine:
                 self.active[i] = True
 
     def _sample(self, logits, temperature):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
+        """Next-token sampling; ``temperature`` is a scalar or a per-slot
+        (B,) vector — 0 means greedy argmax for that slot."""
+        t = jnp.atleast_1d(jnp.asarray(temperature, jnp.float32))
+        greedy = jnp.argmax(logits, axis=-1)
+        if not bool((t > 0).any()):
+            return greedy
         self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(k, logits / temperature, axis=-1)
+        safe = jnp.where(t > 0, t, 1.0)
+        scaled = logits / safe.reshape(t.shape + (1,) * (logits.ndim - 1))
+        sampled = jax.random.categorical(k, scaled, axis=-1)
+        keep = (t > 0).reshape(t.shape + (1,) * (greedy.ndim - 1))
+        return jnp.where(keep, sampled, greedy)
 
     def step(self) -> int:
         """One decode step over all active slots. Returns #active."""
@@ -94,8 +116,13 @@ class DecodeEngine:
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._step(self.params, self.cache, tok, pos)
 
-        # (B,) or (B, cb)
-        next_tok = np.asarray(self._sample(logits[:, 0], 0.0))
+        # (B,) or (B, cb) — sampled at each slot's OWN request
+        # temperature (inactive slots decode greedily into the void).
+        temps = np.zeros((self.batch,), np.float32)
+        for i, req in enumerate(self.slots):
+            if req is not None and self.active[i]:
+                temps[i] = req.temperature
+        next_tok = np.asarray(self._sample(logits[:, 0], temps))
         for i in range(self.batch):
             req = self.slots[i]
             if req is None or not self.active[i]:
@@ -131,6 +158,38 @@ class DecodeEngine:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class DcnRequest:
+    """One vision serving request: a small batch of images.
+
+    ``out`` fills per image as serving steps complete the images' slots;
+    the request finishes when its last image does. Latency is
+    submit -> finish on the engine's clock (wall time by default, a
+    virtual clock in open-loop benchmarks).
+    """
+
+    rid: int
+    x: np.ndarray                # (n, H, W, C)
+    submit_s: float
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_s: float = 0.0
+
+    @property
+    def n_images(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def latency_s(self) -> float:
+        return (self.finish_s - self.submit_s) if self.done else 0.0
+
+    def result(self) -> np.ndarray:
+        """Stacked per-image outputs, in submit order."""
+        if not self.done:
+            raise RuntimeError(f"request {self.rid} is not finished")
+        return np.stack([np.asarray(o) for o in self.out])
+
+
 class DcnServingEngine:
     """Inference service for the paper's DCN networks over the graph
     executor (cross-layer fused groups, batched tile-grid dispatch).
@@ -142,17 +201,36 @@ class DcnServingEngine:
     the batched kernel dispatches. Typical serving traffic is bursts of
     near-duplicate frames (video, retries, canaries), which is exactly
     the cache's hit population.
+
+    Two serving modes:
+
+    * ``infer(x)`` — serve one request synchronously, whole batch in one
+      executor call (the serve-one-at-a-time baseline).
+    * ``submit(x)`` / ``step()`` / ``drain()`` — continuous batching: a
+      submit queue feeds a fixed pool of ``slots`` image slots; each
+      ``step()`` admits queued images into free slots (mid-flight, so a
+      request arriving between steps joins the next step's batch) and
+      serves ALL occupied slots with one ``batch_fused`` ragged grid per
+      layer segment. Every admitted image completes within its step
+      (vision inference has no iterative decode), so slots free each
+      step and admission is purely a queue->pool refill. ``submit`` is
+      thread-safe; ``step``/``drain`` are driven by one serving loop.
     """
 
-    def __init__(self, params, cfg, *, graph=None, cache_size: int = 256):
+    def __init__(self, params, cfg, *, graph=None, cache_size: int = 256,
+                 slots: int = 4,
+                 clock: Callable[[], float] | None = None):
         # Local imports keep the LM serving path import-light.
         from repro.models.dcn_models import DcnNetConfig
-        from repro.runtime import (GraphConfig, OverlapSpans, ScheduleCache,
-                                   build_graph)
+        from repro.runtime import (GraphConfig, LatencyStats, OverlapSpans,
+                                   ScheduleCache, build_graph,
+                                   clamp_tile_config)
 
         if not isinstance(cfg, DcnNetConfig):
             raise ValueError(
                 f"DcnServingEngine needs a DcnNetConfig, got {type(cfg)}")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
         self.params = params
         self.cfg = cfg
         self.graph_cfg = graph or GraphConfig()
@@ -162,6 +240,33 @@ class DcnServingEngine:
         self.images = 0
         self.kernel_dispatches = 0
         self.overlap = OverlapSpans()
+        # Continuous-batching state. The step config pins the coalesced
+        # dispatch mode to batch_fused (the ragged batch grid handles
+        # whatever mix of slot images a step happens to coalesce) and is
+        # clamped once: serving images all share the config's plane.
+        self.n_slots = int(slots)
+        self._clock = clock if clock is not None else time.perf_counter
+        self._lock = threading.Lock()
+        self._queue: deque[tuple[DcnRequest, int]] = deque()
+        self._slots: list[tuple[DcnRequest, int] | None] = (
+            [None] * self.n_slots)
+        self._rid = itertools.count()
+        self.latency = LatencyStats()
+        self.steps = 0
+        self.last_trace = None
+        self._step_cfg = clamp_tile_config(
+            dataclasses.replace(self.graph_cfg, dispatch="batch_fused"),
+            cfg.img_size, cfg.img_size)
+
+    def _absorb_trace(self, trace) -> None:
+        """Fold one executor trace into the engine counters (caller must
+        hold ``self._lock``)."""
+        self.kernel_dispatches += trace.kernel_dispatches
+        self.overlap.prepass_s += trace.overlap.prepass_s
+        self.overlap.prepass_wait_s += trace.overlap.prepass_wait_s
+        self.overlap.schedule_s += trace.overlap.schedule_s
+        self.overlap.schedule_device_s += trace.overlap.schedule_device_s
+        self.last_trace = trace
 
     def infer(self, x: jax.Array) -> jax.Array:
         """Serve one request batch (N, H, W, C) -> logits."""
@@ -173,15 +278,104 @@ class DcnServingEngine:
                              config=gcfg,
                              max_displacement=self.cfg.max_displacement,
                              return_trace=True, schedule_cache=self.cache)
-        self.requests += 1
-        self.images += int(x.shape[0])
-        self.kernel_dispatches += trace.kernel_dispatches
-        self.overlap.prepass_s += trace.overlap.prepass_s
-        self.overlap.prepass_wait_s += trace.overlap.prepass_wait_s
-        self.overlap.schedule_s += trace.overlap.schedule_s
-        self.overlap.schedule_device_s += trace.overlap.schedule_device_s
+        with self._lock:
+            self.requests += 1
+            self.images += int(x.shape[0])
+            self._absorb_trace(trace)
         return _apply_head(self.params, self.cfg, y,
                            self.cfg.name == "segnet")
+
+    # -- continuous batching ------------------------------------------------
+
+    def submit(self, x) -> DcnRequest:
+        """Enqueue a request (thread-safe). ``x`` is one image (H, W, C)
+        or a batch (n, H, W, C) matching the engine's configured plane.
+        Returns the :class:`DcnRequest` handle; results appear on it
+        once serving steps complete its images."""
+        x = np.asarray(x)
+        if x.ndim == 3:
+            x = x[None]
+        g = self.net_graph
+        if x.ndim != 4 or x.shape[1:] != (g.in_h, g.in_w, g.in_c):
+            raise ValueError(
+                f"request images must be (n, {g.in_h}, {g.in_w}, "
+                f"{g.in_c}); got {x.shape}")
+        if x.shape[0] == 0:
+            raise ValueError(
+                "empty request: a serving request needs at least one "
+                "image")
+        with self._lock:
+            req = DcnRequest(rid=next(self._rid), x=x,
+                             submit_s=self._clock(),
+                             out=[None] * int(x.shape[0]))
+            self.requests += 1
+            for j in range(req.n_images):
+                self._queue.append((req, j))
+        return req
+
+    @property
+    def queue_depth(self) -> int:
+        """Images waiting for a slot (not yet admitted)."""
+        with self._lock:
+            return len(self._queue)
+
+    def step(self) -> list[DcnRequest]:
+        """One continuous-batching serving step.
+
+        Admission: free slots refill from the queue in submit order —
+        a large request's images may split across steps, and images from
+        different requests coalesce into the same step. Execution: one
+        ``batch_fused`` ragged grid per layer segment over ALL occupied
+        slots (the per-image schedules — and therefore the DRAM trace —
+        are exactly the per-image simulator's; the batch only shares
+        dispatches). Returns the requests that finished this step.
+        """
+        from repro.models.dcn_models import _apply_head
+        from repro.runtime import run_graph
+
+        with self._lock:
+            for i in range(self.n_slots):
+                if self._slots[i] is None and self._queue:
+                    self._slots[i] = self._queue.popleft()
+            occupied = [(i, s[0], s[1])
+                        for i, s in enumerate(self._slots) if s is not None]
+        if not occupied:
+            return []
+        xb = jnp.asarray(np.stack([req.x[j] for _, req, j in occupied]))
+        y, trace = run_graph(self.params["convs"], self.net_graph, xb,
+                             config=self._step_cfg,
+                             max_displacement=self.cfg.max_displacement,
+                             return_trace=True, schedule_cache=self.cache)
+        out = np.asarray(_apply_head(self.params, self.cfg, y,
+                                     self.cfg.name == "segnet"))
+        finished: list[DcnRequest] = []
+        now = self._clock()
+        with self._lock:
+            self.steps += 1
+            self.images += len(occupied)
+            self._absorb_trace(trace)
+            for k, (i, req, j) in enumerate(occupied):
+                req.out[j] = out[k]
+                self._slots[i] = None
+                if all(o is not None for o in req.out):
+                    req.done = True
+                    req.finish_s = now
+                    self.latency.add(now - req.submit_s)
+                    finished.append(req)
+        return finished
+
+    def drain(self, max_steps: int = 10_000) -> list[DcnRequest]:
+        """Serve until queue and slots are empty. Returns every request
+        that finished during the drain, each exactly once."""
+        finished: list[DcnRequest] = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            with self._lock:
+                idle = (not self._queue
+                        and all(s is None for s in self._slots))
+            if idle:
+                break
+        return finished
 
     @property
     def stats(self) -> dict[str, Any]:
@@ -196,22 +390,32 @@ class DcnServingEngine:
         """
         info = self.cache.info()
         total = info["hits"] + info["misses"]
-        return {
-            "requests": self.requests,
-            "images": self.images,
-            "schedule_cache_hits": info["hits"],
-            "schedule_cache_misses": info["misses"],
-            "schedule_cache_hit_rate": (info["hits"] / total
-                                        if total else 0.0),
-            "schedule_cache_size": info["size"],
-            "image_hits": info["image_hits"],
-            "batch_assemblies": info["batch_assemblies"],
-            "kernel_dispatches": self.kernel_dispatches,
-            "dispatches_per_batch": (self.kernel_dispatches / self.requests
-                                     if self.requests else 0.0),
-            "host_overlap_frac": self.overlap.host_overlap_frac,
-            "schedule_backend": self.graph_cfg.schedule_backend,
-            "dispatch": self.graph_cfg.dispatch,
-            "schedule_s": self.overlap.schedule_s,
-            "schedule_device_frac": self.overlap.schedule_device_frac,
-        }
+        with self._lock:
+            return {
+                "requests": self.requests,
+                "images": self.images,
+                "schedule_cache_hits": info["hits"],
+                "schedule_cache_misses": info["misses"],
+                "schedule_cache_hit_rate": (info["hits"] / total
+                                            if total else 0.0),
+                "schedule_cache_size": info["size"],
+                "image_hits": info["image_hits"],
+                "image_lookups": info["image_lookups"],
+                "image_hit_rate": (info["image_hits"]
+                                   / info["image_lookups"]
+                                   if info["image_lookups"] else 0.0),
+                "batch_assemblies": info["batch_assemblies"],
+                "kernel_dispatches": self.kernel_dispatches,
+                "dispatches_per_batch": (self.kernel_dispatches
+                                         / self.requests
+                                         if self.requests else 0.0),
+                "host_overlap_frac": self.overlap.host_overlap_frac,
+                "schedule_backend": self.graph_cfg.schedule_backend,
+                "dispatch": self.graph_cfg.dispatch,
+                "schedule_s": self.overlap.schedule_s,
+                "schedule_device_frac": self.overlap.schedule_device_frac,
+                "slots": self.n_slots,
+                "queue_depth": len(self._queue),
+                "steps": self.steps,
+                "latency": self.latency.summary(),
+            }

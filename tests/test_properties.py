@@ -263,11 +263,10 @@ class TestShardingProperties:
     def test_resolve_spec_divisibility(self, dim, model):
         """Never emits a spec the mesh can't realize."""
         import jax as _jax
+        from repro.compat import make_mesh
         if model > len(_jax.devices()):
             return
-        mesh = _jax.make_mesh(
-            (1, model), ("data", "model"),
-            axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, model), ("data", "model"))
         spec = resolve_spec(LogicalAxes(("mlp",)), (dim,),
                             {"mlp": "model"}, mesh)
         if spec[0] is not None:
