@@ -16,13 +16,12 @@ same FIFO-replay discipline as bench_scheduling:
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import DeformableConvParams, randomize_offset_conv
+from repro.obs import Stopwatch
 from repro.core.simulator import simulate_network
 from repro.models.dcn_models import DcnNetConfig, dcn_net_apply, init_dcn_net
 from repro.runtime.fused_exec import (GraphConfig, network_sim_specs,
@@ -157,11 +156,11 @@ def run_dispatch(csv=print, img: int = 13, n_deform: int = 2,
                                     - y_ref.astype(jnp.float32))))
         best = float("inf")
         for _ in range(repeats):
-            t0 = time.perf_counter()
-            y, trace = run_graph(params["convs"], graph, x, config=gcfg,
-                                 return_trace=True)
-            jax.block_until_ready(y)
-            best = min(best, time.perf_counter() - t0)
+            with Stopwatch() as sw:
+                y, trace = run_graph(params["convs"], graph, x,
+                                     config=gcfg, return_trace=True)
+                jax.block_until_ready(y)
+            best = min(best, sw.dur)
         results[name] = (best, trace, err)
         csv(f"dispatch_mode,mode={name},wall_ms={1e3 * best:.1f},"
             f"dispatches={trace.kernel_dispatches},"

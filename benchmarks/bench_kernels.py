@@ -8,8 +8,6 @@ Every timing row is preceded by an allclose gate vs the jnp oracle.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
@@ -18,15 +16,16 @@ from repro.kernels import ref
 from repro.kernels.dcn_bli import bli_gather_reference, bli_tile_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import coords_to_idx_coeff, deformable_conv2d_pallas
+from repro.obs import Stopwatch
 
 
 def _time(fn, *args, iters=5):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+    with Stopwatch() as sw:
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+    return sw.dur / iters * 1e6
 
 
 def run(csv=print):

@@ -14,13 +14,12 @@ ours.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deform import conv2d, offsets_to_coords
+from repro.obs import Stopwatch
 from repro.core.scheduler import assemble_device_schedule, schedule_tiles
 from repro.core.simulator import dram_energy, simulate_strategies
 from repro.core.tiles import TileGrid, per_pixel_input_tiles, tdt_from_coords
@@ -157,9 +156,9 @@ def run_backends(csv=print, h: int = 24, w: int = 24, c: int = 8,
     def best(fn):
         times = []
         for _ in range(repeats):
-            t0 = time.perf_counter()
-            fn()
-            times.append(time.perf_counter() - t0)
+            with Stopwatch() as sw:
+                fn()
+            times.append(sw.dur)
         return min(times) / n
 
     host_scheds = [host_build(i) for i in range(n)]     # also warms jit
@@ -184,16 +183,15 @@ def run_backends(csv=print, h: int = 24, w: int = 24, c: int = 8,
                              use_schedule_cache=False,
                              schedule_backend=backend)
         dcn_pipeline(x, params, config=cfg)              # warm
-        t0 = time.perf_counter()
-        y, tr = dcn_pipeline(x, params, config=cfg, return_trace=True)
-        jax.block_until_ready(y)
-        wall = time.perf_counter() - t0
+        with Stopwatch() as sw:
+            y, tr = dcn_pipeline(x, params, config=cfg, return_trace=True)
+            jax.block_until_ready(y)
         csv(f"sched_backend_e2e,backend={backend},"
             f"prepass_s_per_img={tr.overlap.prepass_s / n:.6f},"
             f"sched_s_per_img={tr.overlap.schedule_s / n:.6f},"
             f"host_overlap_frac={tr.host_overlap_frac:.3f},"
             f"schedule_device_frac={tr.schedule_device_frac:.3f},"
-            f"wall_s={wall:.4f}")
+            f"wall_s={sw.dur:.4f}")
     return dict(host_sched_s_per_img=host_s,
                 device_host_s_per_img=dev_host_s,
                 device_kernel_s_per_img=dev_kernel_s,
@@ -226,10 +224,11 @@ def run_batch_fused(csv=print, h: int = 16, w: int = 16, c: int = 8,
         dcn_pipeline(x, params, config=cfg)                  # warm compile
         wall = float("inf")
         for _ in range(repeats):
-            t0 = time.perf_counter()
-            y, tr = dcn_pipeline(x, params, config=cfg, return_trace=True)
-            jax.block_until_ready(y)
-            wall = min(wall, time.perf_counter() - t0)
+            with Stopwatch() as sw:
+                y, tr = dcn_pipeline(x, params, config=cfg,
+                                     return_trace=True)
+                jax.block_until_ready(y)
+            wall = min(wall, sw.dur)
         return y, tr, wall
 
     out = {}

@@ -32,6 +32,8 @@ if _ROOT not in sys.path:   # allow `python benchmarks/bench_serving.py`
     sys.path.insert(0, _ROOT)
 
 from benchmarks.bench_graph import _case
+from repro.obs import (Stopwatch, Tracer, chrome_trace,
+                       validate_chrome_trace, write_json)
 from repro.runtime import GraphConfig
 from repro.serving import DcnServingEngine
 
@@ -77,11 +79,13 @@ def _simulate_sequential(params, cfg, tile, xs, arrivals):
     return np.asarray(lat), len(xs) / (vc() - arrivals[0])
 
 
-def _simulate_batched(params, cfg, tile, slots, xs, arrivals):
+def _simulate_batched(params, cfg, tile, slots, xs, arrivals,
+                      tracer=None):
     vc = _VirtualClock()
     eng = DcnServingEngine(params, cfg, graph=GraphConfig(tile=tile),
-                           slots=slots, clock=vc)
+                           slots=slots, clock=vc, tracer=tracer)
     n, i, finished = len(xs), 0, []
+    step_wall = 0.0                   # real compute wall inside step()
     while len(finished) < n:
         now = vc()
         while i < n and arrivals[i] <= now:
@@ -93,16 +97,28 @@ def _simulate_batched(params, cfg, tile, slots, xs, arrivals):
         if eng.queue_depth == 0:
             vc.jump_to(arrivals[i])   # idle: fast-forward to next arrival
             continue
-        finished.extend(eng.step())
+        with Stopwatch() as sw:
+            finished.extend(eng.step())
+        step_wall += sw.dur
     lat = np.asarray([r.latency_s for r in finished])
-    return lat, n / (vc() - arrivals[0]), eng
+    return lat, n / (vc() - arrivals[0]), eng, step_wall
 
 
 def run(csv=print, img: int = 13, n_deform: int = 2,
         width_mult: float = 0.125, tile: int = 4, slots: int = 8,
-        n_requests: int = 16, load_factor: float = 3.0, seed: int = 0):
+        n_requests: int = 16, load_factor: float = 3.0, seed: int = 0,
+        trace_out: str | None = None, timeline_out: str | None = None,
+        metrics_out: str | None = None):
     """Open-loop arrivals through both serving modes; csv one line of
     throughput + latency percentiles per mode plus the speedup verdict.
+
+    The batched run executes under an enabled :class:`repro.obs.Tracer`:
+    ``serving_trace`` reports the exported Chrome-trace event count, the
+    schema verdict and the ratio of ``serve.step`` span wall to the
+    measured step wall; ``serving_metrics`` cross-checks the engine's
+    ``metrics_snapshot()`` against ``stats``. ``trace_out`` /
+    ``timeline_out`` / ``metrics_out`` dump the Perfetto-loadable trace
+    JSON, the per-step serving timeline and the metrics snapshot.
     """
     cfg, params, _ = _case(img, n_deform, width_mult, seed)
     xs = _request_stream(n_requests, img, seed + 1)
@@ -122,16 +138,16 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
 
     # Calibrate the arrival rate to ``load_factor`` x the sequential
     # service rate — past saturation, so the baseline queues.
-    t0 = time.perf_counter()
-    warm.infer(jnp.asarray(xs[0][None]))
-    service_s = time.perf_counter() - t0
-    rate = load_factor / max(service_s, 1e-9)
+    with Stopwatch() as sw:
+        warm.infer(jnp.asarray(xs[0][None]))
+    rate = load_factor / max(sw.dur, 1e-9)
     rng = np.random.default_rng(seed + 2)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
 
     seq_lat, seq_rps = _simulate_sequential(params, cfg, tile, xs, arrivals)
-    bat_lat, bat_rps, eng = _simulate_batched(params, cfg, tile, slots, xs,
-                                              arrivals)
+    tracer = Tracer(enabled=True)
+    bat_lat, bat_rps, eng, step_wall = _simulate_batched(
+        params, cfg, tile, slots, xs, arrivals, tracer=tracer)
     assert eng.stats["latency"]["count"] == n_requests
 
     def pct(a, q):
@@ -154,6 +170,47 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
         f"kernel_dispatches={s['kernel_dispatches']},"
         f"image_hit_rate={s['image_hit_rate']:.3f},"
         f"queue_depth_end={s['queue_depth']}")
+
+    # Telemetry: export the batched run's trace, schema-check it, and
+    # reconcile the serve.step span wall against the measured step wall
+    # (the two clocks bracket the same region, so the ratio pins span
+    # accounting to reality).
+    doc = chrome_trace(tracer)
+    problems = validate_chrome_trace(doc)
+    span_wall = sum(sp.dur for sp in tracer.snapshot()
+                    if sp.name == "serve.step")
+    span_wall_frac = span_wall / step_wall if step_wall else 0.0
+    csv(f"serving_trace,events={len(doc['traceEvents'])},"
+        f"spans={len(tracer)},span_wall_frac={span_wall_frac:.3f},"
+        f"schema_ok={'yes' if not problems else 'NO'}")
+
+    snap = eng.metrics_snapshot()
+    lat = snap["serving.latency_s"]
+    metrics_match = (
+        snap["serving.kernel_dispatches"] == s["kernel_dispatches"]
+        and snap["serving.images"] == s["images"]
+        and snap["serving.steps"] == s["steps"]
+        and snap["schedule_cache.hits"] == s["schedule_cache_hits"]
+        and snap["schedule_cache.misses"] == s["schedule_cache_misses"]
+        and abs(snap["schedule_cache.image_hit_rate"]
+                - s["image_hit_rate"]) < 1e-12
+        and snap["serving.host_schedule_builds"]
+            == s["host_schedule_builds"]
+        and lat["count"] == s["latency"]["count"])
+    dps = (s["kernel_dispatches"] / s["steps"]) if s["steps"] else 0.0
+    csv(f"serving_metrics,metrics={len(snap)},"
+        f"dispatches_per_step={dps:.3f},"
+        f"image_hit_rate={snap['schedule_cache.image_hit_rate']:.3f},"
+        f"host_schedule_builds={snap['serving.host_schedule_builds']},"
+        f"timeline_steps={len(eng.timeline)},"
+        f"metrics_match_stats={'yes' if metrics_match else 'NO'}")
+
+    if trace_out:
+        write_json(trace_out, doc)
+    if timeline_out:
+        write_json(timeline_out, eng.timeline)
+    if metrics_out:
+        write_json(metrics_out, snap)
     return seq_rps, bat_rps, eng
 
 

@@ -26,12 +26,19 @@ the CI bench-smoke job) if:
     serve-one-at-a-time baseline by >= 1.5x requests/sec on the
     open-loop arrival benchmark (ISSUE 6 gate — BENCH_serving.json
     carries the p50/p95/p99 latencies of both modes);
+  * the serving telemetry is broken (ISSUE 7 gate): the exported
+    Chrome-trace JSON fails schema validation, the ``serve.step`` span
+    wall diverges more than 10% from the measured step wall, or the
+    engine's ``metrics_snapshot()`` disagrees with ``stats`` — the
+    trace / timeline / metrics snapshot are written as
+    ``TELEMETRY_serving_*.json`` next to the bench artifacts;
   * ``--compare BASELINE_DIR`` is given (previous main-branch
     ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or a
-    dispatch count (batched per-image, or batch-fused at batch>1)
-    regress more than 10% against the baseline, or serving requests/sec
-    drops more than 10% below it (direction-aware: rps is
-    higher-is-better).
+    dispatch count (batched per-image, batch-fused at batch>1, or
+    serving dispatches/step) regress more than 10% against the
+    baseline, or serving requests/sec or the serving schedule-cache
+    image hit rate drops more than 10% below it (direction-aware:
+    rps and hit rate are higher-is-better).
 """
 
 from __future__ import annotations
@@ -99,6 +106,10 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
          lambda p: int(p["batch_fused_dispatch_count"]), "lower"),
         ("BENCH_serving.json", "serving requests/sec (batched)",
          lambda p: float(p["serving_batched_rps"]), "higher"),
+        ("BENCH_serving.json", "serving dispatches per step",
+         lambda p: float(p["serving_dispatches_per_step"]), "lower"),
+        ("BENCH_serving.json", "serving image hit rate",
+         lambda p: float(p["serving_image_hit_rate"]), "higher"),
     ]
     for fname, what, extract, direction in checks:
         path = os.path.join(baseline_dir, fname)
@@ -175,8 +186,15 @@ def main(argv=None) -> int:
                                                  width_mult=0.125, tile=4)),
         ]),
         "BENCH_serving.json": _collect("serving", [
-            (bench_serving.run, dict(img=13, n_deform=2, width_mult=0.125,
-                                     tile=4, slots=8, n_requests=16)),
+            (bench_serving.run, dict(
+                img=13, n_deform=2, width_mult=0.125, tile=4, slots=8,
+                n_requests=16,
+                trace_out=os.path.join(
+                    args.out, "TELEMETRY_serving_trace.json"),
+                timeline_out=os.path.join(
+                    args.out, "TELEMETRY_serving_timeline.json"),
+                metrics_out=os.path.join(
+                    args.out, "TELEMETRY_serving_metrics.json"))),
         ]),
     }
 
@@ -306,6 +324,43 @@ def main(argv=None) -> int:
         if int(sv["slots"]) >= 4 and speedup < 1.5:
             print(f"ERROR: serving speedup {speedup:.2f}x < 1.5x at "
                   f"slot pool {sv['slots']}")
+            rc = 1
+
+    # Telemetry gate (ISSUE 7 acceptance): the exported Chrome trace
+    # must be schema-valid, the serve.step span wall must agree with the
+    # measured step wall within 10%, and the engine's metrics snapshot
+    # must reproduce every counter `stats` reports.
+    tr_rec = _record(serving_payload, "serving_trace")
+    if tr_rec is None:
+        print("ERROR: serving_trace record missing from bench_serving")
+        rc = 1
+    else:
+        frac = float(tr_rec["span_wall_frac"])
+        serving_payload["serving_trace_events"] = int(tr_rec["events"])
+        serving_payload["serving_span_wall_frac"] = frac
+        if tr_rec["schema_ok"] != "yes":
+            print("ERROR: serving Chrome-trace export failed schema "
+                  "validation")
+            rc = 1
+        if not 0.90 <= frac <= 1.10:
+            print(f"ERROR: serve.step span wall diverges from measured "
+                  f"step wall: span_wall_frac={frac:.3f} outside "
+                  f"[0.90, 1.10]")
+            rc = 1
+    mt_rec = _record(serving_payload, "serving_metrics")
+    if mt_rec is None:
+        print("ERROR: serving_metrics record missing from bench_serving")
+        rc = 1
+    else:
+        serving_payload["serving_dispatches_per_step"] = float(
+            mt_rec["dispatches_per_step"])
+        serving_payload["serving_image_hit_rate"] = float(
+            mt_rec["image_hit_rate"])
+        serving_payload["serving_timeline_steps"] = int(
+            mt_rec["timeline_steps"])
+        if mt_rec["metrics_match_stats"] != "yes":
+            print("ERROR: engine metrics_snapshot() disagrees with "
+                  "engine stats")
             rc = 1
 
     if args.compare:

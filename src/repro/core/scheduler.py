@@ -38,25 +38,20 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs import default_registry
 
-class _HostBuildCounter:
-    """Instrumentation: counts host-side ``TileSchedule`` constructions.
-
-    The batch-fused executors promise a zero-host-round-trip hot path
-    with ``schedule_backend="device"`` — device schedule arrays flow
-    straight into the dispatch operands, and the Python ``TileSchedule``
-    is only assembled lazily for traces. Tests pin that promise by
-    snapshotting this counter around an executor call.
-    """
-
-    def __init__(self) -> None:
-        self.count = 0
-
-    def bump(self) -> None:
-        self.count += 1
-
-
-host_schedule_builds = _HostBuildCounter()
+# Instrumentation: counts host-side ``TileSchedule`` constructions.
+#
+# The batch-fused executors promise a zero-host-round-trip hot path with
+# ``schedule_backend="device"`` — device schedule arrays flow straight
+# into the dispatch operands, and the Python ``TileSchedule`` is only
+# assembled lazily for traces. Tests pin that promise by snapshotting
+# this counter around an executor call; it lives in the process-wide
+# ``repro.obs`` registry so metrics snapshots carry it too.
+host_schedule_builds = default_registry().counter(
+    "host_schedule_builds",
+    help="host-side TileSchedule constructions (0 on the device "
+         "scheduling hot path)")
 
 
 def pow2_pad(x: int) -> int:

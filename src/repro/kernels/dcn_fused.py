@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.obs import get_tracer
+
 
 def _fused_kernel(idx_ref, coeff_ref, x_ref, w_ref, b_ref, o_ref,
                   *, s_pixels: int, kk: int):
@@ -63,7 +65,7 @@ def _fused_kernel(idx_ref, coeff_ref, x_ref, w_ref, b_ref, o_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("kernel_size", "block_p", "interpret"))
-def dcn_fused_tile(
+def _dcn_fused_tile_jit(
     x_tile: jax.Array,   # (S, C_in) flattened halo tile
     idx: jax.Array,      # (P, KK, 4) int32 flat neighbour indices
     coeff: jax.Array,    # (P, KK, 4) float BLI coefficients
@@ -167,7 +169,7 @@ def _sched_kernel(dep_ref, cnt_ref, idx_ref, coeff_ref, x_ref, w_ref, b_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("kernel_size", "block_p", "interpret"))
-def dcn_fused_schedule(
+def _dcn_fused_schedule_jit(
     x_tiles: jax.Array,   # (T_in, tp, C_in) every input tile of the plane
     dep_tbl: jax.Array,   # (T, k_pad) int32 dep table in schedule order
     dep_cnt: jax.Array,   # (T,) int32 true dep count per scheduled tile
@@ -304,7 +306,7 @@ def _batch_kernel(row_ref, dep_ref, cnt_ref, idx_ref, coeff_ref, x_ref,
 @functools.partial(jax.jit,
                    static_argnames=("t_in", "kernel_size", "block_p",
                                     "interpret"))
-def dcn_fused_batch(
+def _dcn_fused_batch_jit(
     x_tiles: jax.Array,   # (N*T_in, tp, C_in) every image's input tiles
     row_id: jax.Array,    # (G,) int32 img*T_out + out_tile (clamped)
     dep_glb: jax.Array,   # (G, k_pad) int32 img*T_in + dep, load order
@@ -382,3 +384,76 @@ def dcn_fused_batch(
         out_shape=jax.ShapeDtypeStruct((g, p, o), x_tiles.dtype),
         interpret=interpret,
     )(row_id, dep_glb, dep_cnt, idx2, coeff2, x_tiles, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Public dispatch wrappers: the jitted kernels above, plus a telemetry
+# span per host dispatch. Spans cannot live INSIDE the jitted functions
+# (they would fire once at trace time, not per call), so each entry
+# point is a thin host wrapper that opens ``dispatch.<mode>`` on the
+# current ``repro.obs`` tracer. Disabled tracer = one extra attribute
+# check per dispatch; calls from inside jit/vmap traces (``x`` is a JAX
+# tracer) skip the span entirely.
+# ---------------------------------------------------------------------------
+
+
+def _span_dispatch(name: str, x, **attrs):
+    tr = get_tracer()
+    if not tr.enabled or isinstance(x, jax.core.Tracer):
+        return None
+    return tr.span(name, **attrs)
+
+
+def dcn_fused_tile(x_tile, idx, coeff, w, b, *, kernel_size: int = 3,
+                   block_p: int = 128, interpret: bool = False):
+    """Fused Eq.2+3 on one tile -> (P, C_out) (see module docstring)."""
+    sp = _span_dispatch("dispatch.per_tile", x_tile,
+                        pixels=int(idx.shape[0]), c_out=int(w.shape[-1]))
+    if sp is None:
+        return _dcn_fused_tile_jit(x_tile, idx, coeff, w, b,
+                                   kernel_size=kernel_size,
+                                   block_p=block_p, interpret=interpret)
+    with sp:
+        return _dcn_fused_tile_jit(x_tile, idx, coeff, w, b,
+                                   kernel_size=kernel_size,
+                                   block_p=block_p, interpret=interpret)
+
+
+def dcn_fused_schedule(x_tiles, dep_tbl, dep_cnt, idx, coeff, w, b, *,
+                       kernel_size: int = 3, block_p: int = 128,
+                       interpret: bool = False):
+    """Fused Eq.2+3 over a whole tile schedule -> (T, P, C_out)."""
+    sp = _span_dispatch("dispatch.batched", x_tiles,
+                        tiles=int(idx.shape[0]),
+                        c_out=int(w.shape[-1]))
+    if sp is None:
+        return _dcn_fused_schedule_jit(x_tiles, dep_tbl, dep_cnt, idx,
+                                       coeff, w, b,
+                                       kernel_size=kernel_size,
+                                       block_p=block_p,
+                                       interpret=interpret)
+    with sp:
+        return _dcn_fused_schedule_jit(x_tiles, dep_tbl, dep_cnt, idx,
+                                       coeff, w, b,
+                                       kernel_size=kernel_size,
+                                       block_p=block_p,
+                                       interpret=interpret)
+
+
+def dcn_fused_batch(x_tiles, row_id, dep_glb, dep_cnt, idx, coeff, w, b,
+                    *, t_in: int, kernel_size: int = 3,
+                    block_p: int = 128, interpret: bool = False):
+    """Fused Eq.2+3 over a whole batch's schedules -> (G, P, C_out)."""
+    sp = _span_dispatch("dispatch.batch_fused", x_tiles,
+                        grid_rows=int(row_id.shape[0]),
+                        c_out=int(w.shape[-1]))
+    if sp is None:
+        return _dcn_fused_batch_jit(x_tiles, row_id, dep_glb, dep_cnt,
+                                    idx, coeff, w, b, t_in=t_in,
+                                    kernel_size=kernel_size,
+                                    block_p=block_p, interpret=interpret)
+    with sp:
+        return _dcn_fused_batch_jit(x_tiles, row_id, dep_glb, dep_cnt,
+                                    idx, coeff, w, b, t_in=t_in,
+                                    kernel_size=kernel_size,
+                                    block_p=block_p, interpret=interpret)

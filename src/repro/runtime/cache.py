@@ -143,6 +143,21 @@ class ScheduleCache:
                     "image_lookups": self.image_lookups,
                     "batch_assemblies": self.batch_assemblies}
 
+    def publish(self, registry, prefix: str = "schedule_cache") -> None:
+        """Mirror the cache counters into a
+        :class:`repro.obs.MetricsRegistry` as gauges (plus the derived
+        hit rates), so ``registry.snapshot()`` carries the cache state
+        alongside the rest of the telemetry."""
+        info = self.info()
+        for k, v in info.items():
+            registry.gauge(f"{prefix}.{k}").set(v)
+        lookups = info["hits"] + info["misses"]
+        registry.gauge(f"{prefix}.hit_rate").set(
+            info["hits"] / lookups if lookups else 0.0)
+        registry.gauge(f"{prefix}.image_hit_rate").set(
+            info["image_hits"] / info["image_lookups"]
+            if info["image_lookups"] else 0.0)
+
 
 _DEFAULT_CACHE = ScheduleCache(maxsize=128)
 

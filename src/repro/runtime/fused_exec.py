@@ -46,7 +46,6 @@ tests/test_batched_dispatch.py pin the numerics vs the XLA reference.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
 
 import jax
@@ -65,6 +64,7 @@ from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
 from repro.kernels.dcn_schedule import (tdt_dispatch_arrays,
                                         tdt_from_coords_device)
 from repro.kernels.ops import round_up
+from repro.obs import Tracer, get_tracer, use_tracer
 from repro.runtime.cache import (ScheduleCache, chain_digest, conv_digest,
                                  coords_digest, default_schedule_cache)
 from repro.runtime.graph import (DeformNode, FusedGroup, NetGraph, PoolNode,
@@ -287,6 +287,7 @@ def _group_schedule_artifacts(
     cache: ScheduleCache | None,
     need_out_plane: bool,
     interp: bool = False,
+    tracer: Tracer | None = None,
 ) -> tuple[_GroupArtifacts, jax.Array]:
     """Prepass for one group: per-layer TDTs + neighbour tables +
     composite schedule, plus the group's dense output plane when
@@ -297,6 +298,7 @@ def _group_schedule_artifacts(
     The (TDTs, schedule) pair is cached under the quantized-coords chain
     digest when a cache is given.
     """
+    tr = tracer if tracer is not None else get_tracer()
     # Dense planes are consumed only by DeformNode offset convs; stop
     # advancing after the last consumer (monotone: deforms never reappear
     # past this point within the group when need_out_plane is False).
@@ -328,18 +330,21 @@ def _group_schedule_artifacts(
     def build():
         device = cfg.schedule_backend == "device"
         b_layers = []
-        for node, coords in zip(group.nodes, dcn_coords):
-            if coords is None:
-                # Standard-conv halos are static per grid — no offsets
-                # to decode, so the analytic host table stays.
-                b_layers.append(tdt_standard_conv(grid, grid,
-                                                  node.kernel_size))
-            elif device:
-                b_layers.append(np.asarray(tdt_from_coords_device(
-                    coords, grid, grid, interpret=interp)))
-            else:
-                b_layers.append(np.asarray(tdt_from_coords(coords, grid,
-                                                           grid)))
+        with tr.span("prepass.tdt", backend=cfg.schedule_backend,
+                     layers=group.n_layers):
+            for node, coords in zip(group.nodes, dcn_coords):
+                if coords is None:
+                    # Standard-conv halos are static per grid — no offsets
+                    # to decode, so the analytic host table stays.
+                    b_layers.append(tdt_standard_conv(grid, grid,
+                                                      node.kernel_size))
+                elif device:
+                    b_layers.append(np.asarray(tdt_from_coords_device(
+                        coords, grid, grid, interpret=interp)))
+                else:
+                    b_layers.append(np.asarray(tdt_from_coords(coords,
+                                                               grid,
+                                                               grid)))
         comp = compose_tdt_chain(b_layers)
         if cfg.schedule == "alg1":
             sched = schedule_tiles(comp, m,
@@ -351,18 +356,20 @@ def _group_schedule_artifacts(
             raise ValueError(f"unknown schedule: {cfg.schedule!r}")
         return b_layers, sched
 
-    t0 = time.perf_counter()
-    if cache is None:
-        b_layers, sched = build()
-        hit = None
-    else:
-        # Tile dims are hashed into every digest via the grid, but stay
-        # an explicit key component too: same coords under a different
-        # (tile_h, tile_w) must never collide.
-        key = (chain_digest(digests, grid), grid.th, grid.tw, m,
-               cfg.schedule)
-        (b_layers, sched), hit = cache.get_or_build(key, build)
-    schedule_s = time.perf_counter() - t0
+    with tr.timed("prepass.schedule",
+                  backend=cfg.schedule_backend) as ssp:
+        if cache is None:
+            b_layers, sched = build()
+            hit = None
+        else:
+            # Tile dims are hashed into every digest via the grid, but
+            # stay an explicit key component too: same coords under a
+            # different (tile_h, tile_w) must never collide.
+            key = (chain_digest(digests, grid), grid.th, grid.tw, m,
+                   cfg.schedule)
+            (b_layers, sched), hit = cache.get_or_build(key, build)
+        ssp.set(cached=hit)
+    schedule_s = ssp.dur
 
     # Pack the batched-grid operands here, on the staging thread. The
     # schedule cache cannot cover this: idx follows the quantized coords
@@ -375,21 +382,25 @@ def _group_schedule_artifacts(
         oid_arr = np.asarray(sched.oid, np.int32)
         last = group.n_layers - 1
         packed = []
-        for j, node in enumerate(group.nodes):
-            if not isinstance(node, DeformNode):
-                packed.append(None)
-                continue
-            # Grid order: the Algorithm-1 schedule for the group's output
-            # layer; plane order for interior layers (their tiles never
-            # touch DRAM, so order is free).
-            out_order = (oid_arr if j == last
-                         else np.arange(grid.num_tiles, dtype=np.int32))
-            dep_lists = [np.flatnonzero(b_layers[j][t]) for t in out_order]
-            k_pad = pow2_pad(max((len(d) for d in dep_lists), default=1))
-            dep_tbl, dep_cnt, idx, coeff = pack_schedule_tiles(
-                nbs[j], grid, out_order, dep_lists, p_pad, k_pad)
-            packed.append(_LayerDispatch(out_order, dep_tbl, dep_cnt, idx,
-                                         coeff))
+        with tr.span("pack", dispatch="batched", layers=group.n_layers):
+            for j, node in enumerate(group.nodes):
+                if not isinstance(node, DeformNode):
+                    packed.append(None)
+                    continue
+                # Grid order: the Algorithm-1 schedule for the group's
+                # output layer; plane order for interior layers (their
+                # tiles never touch DRAM, so order is free).
+                out_order = (oid_arr if j == last
+                             else np.arange(grid.num_tiles,
+                                            dtype=np.int32))
+                dep_lists = [np.flatnonzero(b_layers[j][t])
+                             for t in out_order]
+                k_pad = pow2_pad(max((len(d) for d in dep_lists),
+                                     default=1))
+                dep_tbl, dep_cnt, idx, coeff = pack_schedule_tiles(
+                    nbs[j], grid, out_order, dep_lists, p_pad, k_pad)
+                packed.append(_LayerDispatch(out_order, dep_tbl, dep_cnt,
+                                             idx, coeff))
 
     art = _GroupArtifacts(
         grid=grid, m=m, b_layers=list(b_layers), nbs=nbs, sched=sched,
@@ -407,6 +418,7 @@ def _image_prepass(
     max_displacement: float | None,
     cache: ScheduleCache | None,
     interp: bool = False,
+    tracer: Tracer | None = None,
 ) -> list[_GroupArtifacts | None]:
     """Host-side prepass of one whole image: the dense stage-1 chain runs
     ahead through the segments as far as the last DeformNode's offset
@@ -438,7 +450,8 @@ def _image_prepass(
                  else cfg.buffer_tiles)
             art, plane = _group_schedule_artifacts(
                 plane, seg, convs, grid, m, cfg, max_displacement, cache,
-                need_out_plane=deform_after[s], interp=interp)
+                need_out_plane=deform_after[s], interp=interp,
+                tracer=tracer)
             arts.append(art)
     return arts
 
@@ -690,6 +703,7 @@ def _group_batch_prepass(
     cache: ScheduleCache | None,
     need_out_plane: bool,
     interp: bool,
+    tracer: Tracer | None = None,
 ) -> tuple[_BatchGroupArtifacts, jax.Array]:
     """Batch-level prepass for one group: the stage-1 chain runs batched
     (one XLA dispatch per layer for all images), per-image composite
@@ -697,6 +711,7 @@ def _group_batch_prepass(
     scheduling for the hit images), and the per-layer batch operands are
     concatenated with per-image base offsets. With the device scheduling
     backend everything after the digest stays on-device."""
+    tr = tracer if tracer is not None else get_tracer()
     n = planes.shape[0]
     device = cfg.schedule_backend == "device" and cfg.schedule == "alg1"
     t_out = grid.num_tiles
@@ -724,20 +739,21 @@ def _group_batch_prepass(
         if needs_plane[j]:
             plane = _advance_dense_batch(plane, node, p, max_displacement)
 
-    t0 = time.perf_counter()
-
     def build_bundle(i: int) -> _ImageGroupSched:
         b_layers: list = []
-        for j, node in enumerate(group.nodes):
-            if coords_layers[j] is None:
-                B = tdt_standard_conv(grid, grid, node.kernel_size)
-                b_layers.append(jnp.asarray(B) if device else B)
-            elif device:
-                b_layers.append(tdt_from_coords_device(
-                    coords_layers[j][i], grid, grid, interpret=interp))
-            else:
-                b_layers.append(np.asarray(tdt_from_coords(
-                    coords_layers[j][i], grid, grid)))
+        with tr.span("prepass.tdt", backend=cfg.schedule_backend,
+                     image=i):
+            for j, node in enumerate(group.nodes):
+                if coords_layers[j] is None:
+                    B = tdt_standard_conv(grid, grid, node.kernel_size)
+                    b_layers.append(jnp.asarray(B) if device else B)
+                elif device:
+                    b_layers.append(tdt_from_coords_device(
+                        coords_layers[j][i], grid, grid,
+                        interpret=interp))
+                else:
+                    b_layers.append(np.asarray(tdt_from_coords(
+                        coords_layers[j][i], grid, grid)))
         if device:
             comp = compose_tdt_chain_device(b_layers)
             ds = schedule_arrays_device(comp, m, k_pad=k_pad,
@@ -772,43 +788,50 @@ def _group_batch_prepass(
         return _ImageGroupSched(b_layers, exec_scheds, ds)
 
     bundles, hits = [], []
-    for i in range(n):
-        if cache is None:
-            bundles.append(build_bundle(i))
-            hits.append(None)
-            continue
-        digests = []
-        for j, node in enumerate(group.nodes):
-            if coords_layers[j] is None:
-                digests.append(conv_digest(node.kernel_size, grid))
-            else:
-                digests.append(coords_digest(coords_layers[j][i], grid))
-        key = (chain_digest(digests, grid), grid.th, grid.tw, m,
-               cfg.schedule, "dense")
-        bundle, hit = cache.get_or_build(key,
-                                         lambda i=i: build_bundle(i))
-        bundles.append(bundle)
-        hits.append(hit)
-    schedule_s = time.perf_counter() - t0
+    with tr.timed("prepass.schedule", backend=cfg.schedule_backend,
+                  batch=n) as ssp:
+        for i in range(n):
+            if cache is None:
+                bundles.append(build_bundle(i))
+                hits.append(None)
+                continue
+            digests = []
+            for j, node in enumerate(group.nodes):
+                if coords_layers[j] is None:
+                    digests.append(conv_digest(node.kernel_size, grid))
+                else:
+                    digests.append(coords_digest(coords_layers[j][i],
+                                                 grid))
+            key = (chain_digest(digests, grid), grid.th, grid.tw, m,
+                   cfg.schedule, "dense")
+            bundle, hit = cache.get_or_build(key,
+                                             lambda i=i: build_bundle(i))
+            bundles.append(bundle)
+            hits.append(hit)
+        ssp.set(hits=sum(bool(h) for h in hits))
+    schedule_s = ssp.dur
     if cache is not None:
         cache.note_batch_assembly(sum(bool(h) for h in hits),
                                   images=len(hits))
 
     layer_ops: list[_BatchLayerOps | None] = []
-    for j, node in enumerate(group.nodes):
-        if not isinstance(node, DeformNode):
-            layer_ops.append(None)
-            continue
-        batch = pack_batch_schedules(
-            [bundles[i].exec_scheds[j] for i in range(n)], t_out, t_out)
-        kk = node.kernel_size ** 2
-        idx, coeff = jax.vmap(
-            lambda c: pack_plane_operands(c, grid, p_pad)
-        )(coords_layers[j])
-        layer_ops.append(_BatchLayerOps(
-            batch,
-            idx.reshape(n * t_out, p_pad, kk, 4),
-            coeff.reshape(n * t_out, p_pad, kk, 4)))
+    with tr.span("pack", dispatch="batch_fused", batch=n,
+                 layers=group.n_layers):
+        for j, node in enumerate(group.nodes):
+            if not isinstance(node, DeformNode):
+                layer_ops.append(None)
+                continue
+            batch = pack_batch_schedules(
+                [bundles[i].exec_scheds[j] for i in range(n)], t_out,
+                t_out)
+            kk = node.kernel_size ** 2
+            idx, coeff = jax.vmap(
+                lambda c: pack_plane_operands(c, grid, p_pad)
+            )(coords_layers[j])
+            layer_ops.append(_BatchLayerOps(
+                batch,
+                idx.reshape(n * t_out, p_pad, kk, 4),
+                coeff.reshape(n * t_out, p_pad, kk, 4)))
 
     art = _BatchGroupArtifacts(
         grid=grid, m=m, bundles=bundles, cache_hits=hits,
@@ -932,10 +955,12 @@ def _run_graph_batch_fused(
     max_displacement: float | None,
     trace: NetworkTrace,
     return_trace: bool,
+    tracer: Tracer | None = None,
 ) -> jax.Array:
     """Batch-fused graph execution: the staging unit is a SEGMENT of the
     whole batch (not an image) — segment s+1's batch prepass overlaps
     segment s's execution on the staging thread."""
+    tr = tracer if tracer is not None else get_tracer()
     n = x.shape[0]
     th, tw = cfg.tile_hw
     itemsize = x.dtype.itemsize
@@ -963,7 +988,8 @@ def _run_graph_batch_fused(
         m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
         art, plane = _group_batch_prepass(
             pre_state["plane"], seg, convs, grid, m, cfg, max_displacement,
-            cache, need_out_plane=deform_after[s], interp=interpret)
+            cache, need_out_plane=deform_after[s], interp=interpret,
+            tracer=tr)
         pre_state["plane"] = plane
         return art
 
@@ -990,7 +1016,7 @@ def _run_graph_batch_fused(
         return None
 
     run_staged(len(segments), prepass, execute, cfg.staging_depth,
-               trace.overlap)
+               trace.overlap, tracer=tr)
     # Keep trace.groups image-major like the per-image executors.
     pending.sort(key=lambda g: (g.image, g.group))
     trace.groups.extend(pending)
@@ -1006,6 +1032,7 @@ def run_graph(
     max_displacement: float | None = None,
     return_trace: bool = False,
     schedule_cache: ScheduleCache | None = None,
+    tracer: Tracer | None = None,
 ):
     """Execute a backbone graph over a batch: (N,H,W,C) -> (N,H',W',C').
 
@@ -1019,7 +1046,10 @@ def run_graph(
     runs on a worker thread while image i's kernels execute — the trace's
     ``host_overlap_frac`` reports how much host time was hidden.
     ``schedule_cache`` overrides the process-wide cache (serving engines
-    pass their own).
+    pass their own). ``tracer`` routes span tracing (``prepass.*``,
+    ``pack``, ``dispatch.*``) into an enabled :class:`~repro.obs.Tracer`;
+    default is the current ``repro.obs.get_tracer()`` (a no-op unless
+    enabled or overridden via ``use_tracer``).
     """
     if isinstance(x, jax.core.Tracer):
         raise ValueError(
@@ -1040,6 +1070,7 @@ def run_graph(
             f"plane (interior groups at lower resolution are clamped "
             f"automatically)")
     interpret = resolve_interpret(cfg.interpret)
+    tr = tracer if tracer is not None else get_tracer()
     if schedule_cache is not None:
         cache: ScheduleCache | None = schedule_cache
     else:
@@ -1055,14 +1086,15 @@ def run_graph(
         return (y, trace) if return_trace else y
 
     if cfg.dispatch == "batch_fused":
-        y = _run_graph_batch_fused(convs, segments, x, cfg, interpret,
-                                   cache, max_displacement, trace,
-                                   return_trace)
+        with use_tracer(tr):
+            y = _run_graph_batch_fused(convs, segments, x, cfg, interpret,
+                                       cache, max_displacement, trace,
+                                       return_trace, tracer=tr)
         return (y, trace) if return_trace else y
 
     def prepass(i: int):
         return _image_prepass(x[i], segments, convs, cfg, max_displacement,
-                              cache, interp=interpret)
+                              cache, interp=interpret, tracer=tr)
 
     def execute_image(i: int, arts) -> jax.Array:
         plane = x[i]
@@ -1082,8 +1114,9 @@ def run_graph(
                 trace.groups.append(gt)
         return plane
 
-    outs = run_staged(n, prepass, execute_image, cfg.staging_depth,
-                      trace.overlap)
+    with use_tracer(tr):
+        outs = run_staged(n, prepass, execute_image, cfg.staging_depth,
+                          trace.overlap, tracer=tr)
     y = jnp.stack(outs)
     return (y, trace) if return_trace else y
 

@@ -25,6 +25,7 @@ import functools
 from typing import TYPE_CHECKING, Union
 
 from repro.core.fusion import GroupPlan, LayerShape, plan_fused_groups
+from repro.obs import get_tracer
 
 if TYPE_CHECKING:  # avoid a cycle: models.dcn_models imports fused_exec
     from repro.models.dcn_models import DcnNetConfig
@@ -248,13 +249,16 @@ def partition_graph(graph: NetGraph, onchip_budget_bytes: int,
             segments.append(FusedGroup(tuple(run[gp.start:gp.stop]), gp))
         run.clear()
 
-    for node in graph.nodes:
-        if isinstance(node, (PoolNode, UpsampleNode)):
-            flush()
-            segments.append(node)
-        else:
-            run.append(node)
-    flush()
+    with get_tracer().span("prepass.partition",
+                           nodes=len(graph.nodes)) as sp:
+        for node in graph.nodes:
+            if isinstance(node, (PoolNode, UpsampleNode)):
+                flush()
+                segments.append(node)
+            else:
+                run.append(node)
+        flush()
+        sp.set(segments=len(segments))
     return segments
 
 

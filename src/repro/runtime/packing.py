@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.deform import bli_coefficients
 from repro.core.scheduler import DeviceSchedule
 from repro.core.tiles import TileGrid
+from repro.obs import get_tracer
 
 
 def plane_to_tiles(x: jax.Array, grid: TileGrid) -> jax.Array:
@@ -166,17 +167,18 @@ def pack_schedule_tiles(
     dep_cnt = np.zeros((t,), np.int32)
     idx = np.zeros((t, p_pad, kk, 4), np.int32)
     coeff = np.zeros((t, p_pad, kk, 4), np.float32)
-    for n, (tile, deps) in enumerate(zip(out_tiles, dep_lists)):
-        deps = [int(d) for d in deps]
-        if len(deps) > k_pad:
-            raise ValueError(f"{len(deps)} deps exceed k_pad={k_pad}")
-        if not deps:
-            continue          # all-zero coeff row: the dispatch contributes
+    with get_tracer().span("pack.schedule_tiles", tiles=t, k_pad=k_pad):
+        for n, (tile, deps) in enumerate(zip(out_tiles, dep_lists)):
+            deps = [int(d) for d in deps]
+            if len(deps) > k_pad:
+                raise ValueError(f"{len(deps)} deps exceed k_pad={k_pad}")
+            if not deps:
+                continue      # all-zero coeff row: the dispatch contributes
                               # bias only (schedules never emit such tiles)
-        i, c = pack_output_tile(nb, grid, int(tile), deps, p_pad)
-        idx[n], coeff[n] = i, c
-        dep_tbl[n, :len(deps)] = deps
-        dep_cnt[n] = len(deps)
+            i, c = pack_output_tile(nb, grid, int(tile), deps, p_pad)
+            idx[n], coeff[n] = i, c
+            dep_tbl[n, :len(deps)] = deps
+            dep_cnt[n] = len(deps)
     return dep_tbl, dep_cnt, idx, coeff
 
 
@@ -269,28 +271,30 @@ def pack_batch_schedules(scheds: list[DeviceSchedule], t_in: int,
                          "images in a batch must share the tile grid")
     k_pad = max(s.k_pad for s in scheds)
     rows, deps, cnts, oids, imgs = [], [], [], [], []
-    for i, s in enumerate(scheds):
-        oid_i = jnp.asarray(s.oid).reshape(-1)
-        dep_i = jnp.asarray(s.dep_tbl)
-        cnt_i = jnp.asarray(s.dep_cnt).reshape(-1)
-        if dep_i.shape[1] < k_pad:
-            dep_i = jnp.pad(dep_i,
-                            ((0, 0), (0, k_pad - dep_i.shape[1])))
-        valid = oid_i >= 0
-        # Padded suffix rows repeat the image's last real dep so their
-        # (skipped) grid steps issue no fresh DMA.
-        last_row = jnp.maximum(jnp.sum(valid) - 1, 0)
-        last_dep = dep_i[last_row,
-                         jnp.maximum(cnt_i[last_row] - 1, 0)]
-        dep_i = jnp.where(valid[:, None], dep_i, last_dep)
-        rows.append(i * t_out + jnp.maximum(oid_i, 0))
-        deps.append(i * t_in + dep_i)
-        cnts.append(cnt_i)
-        oids.append(oid_i)
-        imgs.append(jnp.full((n_rows,), i, jnp.int32))
-    return BatchDispatch(
-        row_id=jnp.concatenate(rows).astype(jnp.int32),
-        dep_glb=jnp.concatenate(deps).astype(jnp.int32),
-        dep_cnt=jnp.concatenate(cnts).astype(jnp.int32),
-        oid=jnp.concatenate(oids).astype(jnp.int32),
-        img_id=jnp.concatenate(imgs))
+    with get_tracer().span("pack.batch_schedules", batch=len(scheds),
+                           rows=n_rows):
+        for i, s in enumerate(scheds):
+            oid_i = jnp.asarray(s.oid).reshape(-1)
+            dep_i = jnp.asarray(s.dep_tbl)
+            cnt_i = jnp.asarray(s.dep_cnt).reshape(-1)
+            if dep_i.shape[1] < k_pad:
+                dep_i = jnp.pad(dep_i,
+                                ((0, 0), (0, k_pad - dep_i.shape[1])))
+            valid = oid_i >= 0
+            # Padded suffix rows repeat the image's last real dep so
+            # their (skipped) grid steps issue no fresh DMA.
+            last_row = jnp.maximum(jnp.sum(valid) - 1, 0)
+            last_dep = dep_i[last_row,
+                             jnp.maximum(cnt_i[last_row] - 1, 0)]
+            dep_i = jnp.where(valid[:, None], dep_i, last_dep)
+            rows.append(i * t_out + jnp.maximum(oid_i, 0))
+            deps.append(i * t_in + dep_i)
+            cnts.append(cnt_i)
+            oids.append(oid_i)
+            imgs.append(jnp.full((n_rows,), i, jnp.int32))
+        return BatchDispatch(
+            row_id=jnp.concatenate(rows).astype(jnp.int32),
+            dep_glb=jnp.concatenate(deps).astype(jnp.int32),
+            dep_cnt=jnp.concatenate(cnts).astype(jnp.int32),
+            oid=jnp.concatenate(oids).astype(jnp.int32),
+            img_id=jnp.concatenate(imgs))

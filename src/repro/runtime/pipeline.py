@@ -30,7 +30,6 @@ XLA ``fused_deformable_conv2d`` (checkpoint) formulation.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
@@ -47,6 +46,7 @@ from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
                                      dcn_fused_tile)
 from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.kernels.ops import round_up
+from repro.obs import Tracer, get_tracer, use_tracer
 from repro.runtime.cache import coords_digest, default_schedule_cache
 from repro.runtime.packing import (NeighbourTables, build_neighbour_tables,
                                    pack_batch_schedules, pack_output_tile,
@@ -63,7 +63,8 @@ def resolve_interpret(flag: bool | None) -> bool:
     return bool(flag)
 
 
-def run_staged(n: int, prepass, execute, depth: int, overlap) -> list:
+def run_staged(n: int, prepass, execute, depth: int, overlap,
+               tracer: Tracer | None = None) -> list:
     """The multi-image staging queue shared by both executors.
 
     ``prepass(i)`` builds image i's host-side artifacts, ``execute(i,
@@ -71,36 +72,42 @@ def run_staged(n: int, prepass, execute, depth: int, overlap) -> list:
     prepasses run ahead on a single worker thread while the main thread
     executes (jax dispatch is itself async, so the device stays busy
     under the host-side schedule build); ``overlap`` (an
-    :class:`~repro.runtime.trace.OverlapSpans`) accumulates how much
-    prepass time was hidden. Returns the per-image execute results.
+    :class:`~repro.runtime.trace.OverlapSpans`) is re-derived from the
+    ``prepass`` / ``prepass.wait`` spans this queue records through
+    ``tracer`` (always measured; stored only when the tracer is
+    enabled). Returns the per-image execute results.
     """
+    tr = tracer if tracer is not None else get_tracer()
 
-    def timed(i: int):
-        t0 = time.perf_counter()
-        art = prepass(i)
-        return art, time.perf_counter() - t0
+    def staged(i: int):
+        with tr.timed("prepass", unit=i) as sp:
+            art = prepass(i)
+        return art, sp
 
     outs = []
     if depth == 1 or n == 1:
         for i in range(n):
-            art, dur = timed(i)
-            overlap.prepass_s += dur
-            overlap.prepass_wait_s += dur
+            # Serial mode: the execute loop blocks on the whole prepass,
+            # so the wait span wraps it (host_overlap_frac == 0).
+            with tr.timed("prepass.wait", unit=i) as wsp:
+                art, sp = staged(i)
+            overlap.add_span(sp)
+            overlap.add_span(wsp)
             outs.append(execute(i, art))
         return outs
     with ThreadPoolExecutor(max_workers=1) as pool:
         futs: deque = deque()
         nxt = 0
         while nxt < n and len(futs) < depth - 1:
-            futs.append(pool.submit(timed, nxt))
+            futs.append(pool.submit(staged, nxt))
             nxt += 1
         for i in range(n):
-            t0 = time.perf_counter()
-            art, dur = futs.popleft().result()
-            overlap.prepass_wait_s += time.perf_counter() - t0
-            overlap.prepass_s += dur
+            with tr.timed("prepass.wait", unit=i) as wsp:
+                art, sp = futs.popleft().result()
+            overlap.add_span(sp)
+            overlap.add_span(wsp)
             if nxt < n:
-                futs.append(pool.submit(timed, nxt))
+                futs.append(pool.submit(staged, nxt))
                 nxt += 1
             outs.append(execute(i, art))
     return outs
@@ -195,18 +202,21 @@ def _pipeline_prepass(
     p_pad: int,
     cfg: PipelineConfig,
     interp: bool,
+    tracer: Tracer | None = None,
 ) -> _ImageArtifacts:
     """Host-side prepass of one image: TDT -> schedule (cached) ->
     neighbour tables -> (batched) group-level packed operands. With
     ``schedule_backend="device"`` the TDT scatter and the Algorithm-1
     selection run as Pallas kernels and the host only reassembles."""
+    tr = tracer if tracer is not None else get_tracer()
 
     def build_schedule():
-        if cfg.schedule_backend == "device":
-            B = tdt_from_coords_device(coords_i, grid, grid,
-                                       interpret=interp)
-        else:
-            B = tdt_from_coords(coords_i, grid, grid)
+        with tr.span("prepass.tdt", backend=cfg.schedule_backend):
+            if cfg.schedule_backend == "device":
+                B = tdt_from_coords_device(coords_i, grid, grid,
+                                           interpret=interp)
+            else:
+                B = tdt_from_coords(coords_i, grid, grid)
         if cfg.schedule == "alg1":
             return schedule_tiles(B, m, backend=cfg.schedule_backend,
                                   interpret=interp)
@@ -214,33 +224,38 @@ def _pipeline_prepass(
             return sequential_schedule(np.asarray(B))
         raise ValueError(f"unknown schedule: {cfg.schedule!r}")
 
-    t0 = time.perf_counter()
-    if cfg.use_schedule_cache:
-        # Tile dims are hashed inside coords_digest via the grid, but
-        # stay an explicit key component too: two configs sharing coords
-        # must never collide across (tile_h, tile_w).
-        key = (coords_digest(coords_i, grid), grid.th, grid.tw, m,
-               cfg.schedule)
-        sched, cache_hit = default_schedule_cache().get_or_build(
-            key, build_schedule)
-    else:
-        sched, cache_hit = build_schedule(), None
-    schedule_s = time.perf_counter() - t0
+    with tr.timed("prepass.schedule",
+                  backend=cfg.schedule_backend) as ssp:
+        if cfg.use_schedule_cache:
+            # Tile dims are hashed inside coords_digest via the grid, but
+            # stay an explicit key component too: two configs sharing
+            # coords must never collide across (tile_h, tile_w).
+            key = (coords_digest(coords_i, grid), grid.th, grid.tw, m,
+                   cfg.schedule)
+            sched, cache_hit = default_schedule_cache().get_or_build(
+                key, build_schedule)
+        else:
+            sched, cache_hit = build_schedule(), None
+        ssp.set(cached=cache_hit)
+    schedule_s = ssp.dur
 
-    nb = build_neighbour_tables(coords_i, grid)
-    # Uniform packed-buffer size across the image's dispatches (single
-    # kernel compilation): dependent-tile count padded to a power of two.
-    oid, deps, counts = sched.dense()
-    k_pad = deps.shape[1]
-    art = _ImageArtifacts(
-        sched=sched, cache_hit=cache_hit, nb=nb, k_pad=k_pad,
-        schedule_s=schedule_s,
-        schedule_device_s=(schedule_s
-                           if cfg.schedule_backend == "device" else 0.0))
-    if cfg.dispatch == "batched":
-        dep_lists = [d[:c] for d, c in zip(deps, counts)]
-        art.dep_tbl, art.dep_cnt, art.idx, art.coeff = pack_schedule_tiles(
-            nb, grid, oid, dep_lists, p_pad, k_pad)
+    with tr.span("pack", dispatch=cfg.dispatch):
+        nb = build_neighbour_tables(coords_i, grid)
+        # Uniform packed-buffer size across the image's dispatches (one
+        # kernel compilation): dep-tile count padded to a power of two.
+        oid, deps, counts = sched.dense()
+        k_pad = deps.shape[1]
+        art = _ImageArtifacts(
+            sched=sched, cache_hit=cache_hit, nb=nb, k_pad=k_pad,
+            schedule_s=schedule_s,
+            schedule_device_s=(schedule_s
+                               if cfg.schedule_backend == "device"
+                               else 0.0))
+        if cfg.dispatch == "batched":
+            dep_lists = [d[:c] for d, c in zip(deps, counts)]
+            (art.dep_tbl, art.dep_cnt, art.idx,
+             art.coeff) = pack_schedule_tiles(
+                nb, grid, oid, dep_lists, p_pad, k_pad)
     return art
 
 
@@ -373,28 +388,33 @@ def _pipeline_batch_prepass(
     p_pad: int,
     cfg: PipelineConfig,
     interp: bool,
+    tracer: Tracer | None = None,
 ) -> _BatchArtifacts:
     """Whole-batch prepass: per-image dense schedules (cached; partial
     batch hits skip scheduling for the hit images) concatenated into one
     batch grid, plus the plane-ordered packed operands — all jnp, so the
     device scheduling backend keeps the hot path host-free."""
+    tr = tracer if tracer is not None else get_tracer()
     n = coords.shape[0]
     cache = default_schedule_cache() if cfg.use_schedule_cache else None
-    t0 = time.perf_counter()
-    scheds, hits = [], []
-    for i in range(n):
-        ds, hit = build_dense_schedule(coords[i], grid, m, cfg, interp,
-                                       cache)
-        scheds.append(ds)
-        hits.append(hit)
-    batch = pack_batch_schedules(scheds, grid.num_tiles, grid.num_tiles)
-    schedule_s = time.perf_counter() - t0
+    with tr.timed("prepass.schedule", backend=cfg.schedule_backend,
+                  batch=n) as ssp:
+        scheds, hits = [], []
+        for i in range(n):
+            ds, hit = build_dense_schedule(coords[i], grid, m, cfg, interp,
+                                           cache)
+            scheds.append(ds)
+            hits.append(hit)
+        batch = pack_batch_schedules(scheds, grid.num_tiles,
+                                     grid.num_tiles)
+    schedule_s = ssp.dur
     if cache is not None:
         cache.note_batch_assembly(sum(bool(h) for h in hits),
                                   images=len(hits))
 
-    idx, coeff = jax.vmap(
-        lambda c: pack_plane_operands(c, grid, p_pad))(coords)
+    with tr.span("pack", dispatch="batch_fused", batch=n):
+        idx, coeff = jax.vmap(
+            lambda c: pack_plane_operands(c, grid, p_pad))(coords)
     kk = coords.shape[3]
     idx = idx.reshape(n * grid.num_tiles, p_pad, kk, 4)
     coeff = coeff.reshape(n * grid.num_tiles, p_pad, kk, 4)
@@ -479,6 +499,7 @@ def dcn_pipeline(
     interpret: bool | None = None,
     return_trace: bool = False,
     config: PipelineConfig | None = None,
+    tracer: Tracer | None = None,
 ):
     """Scheduler-driven deformable conv over a batch: (N,H,W,C) -> (N,H,W,O).
 
@@ -491,6 +512,9 @@ def dcn_pipeline(
     ``return_trace`` is set.
 
     ``config`` overrides the individual executor keywords when given.
+    ``tracer`` routes the call's telemetry spans (prepass/pack/dispatch)
+    into a specific :class:`~repro.obs.Tracer`; default is the current
+    ``repro.obs.get_tracer()`` (a no-op unless enabled).
     """
     if isinstance(x, jax.core.Tracer):
         raise ValueError(
@@ -501,6 +525,7 @@ def dcn_pipeline(
     cfg = config or PipelineConfig(tile=tile, buffer_tiles=buffer_tiles,
                                    schedule=schedule, block_p=block_p,
                                    interpret=interpret)
+    tr = tracer if tracer is not None else get_tracer()
     n, h, w = x.shape[0], x.shape[1], x.shape[2]
     th, tw = cfg.tile_hw
     if th > h or tw > w:
@@ -530,29 +555,34 @@ def dcn_pipeline(
     if cfg.dispatch == "batch_fused":
         # Batch-level prepass replaces the per-image staging loop: the
         # whole batch's schedules concatenate into ONE kernel dispatch.
-        t0 = time.perf_counter()
-        art = _pipeline_batch_prepass(coords, grid, m, p_pad, cfg, interp)
-        dur = time.perf_counter() - t0
-        trace.overlap.prepass_s += dur
-        trace.overlap.prepass_wait_s += dur
+        with tr.timed("prepass", batch=n) as psp:
+            art = _pipeline_batch_prepass(coords, grid, m, p_pad, cfg,
+                                          interp, tracer=tr)
+        trace.overlap.add_span(psp)
+        trace.overlap.prepass_wait_s += psp.dur
         trace.overlap.schedule_s += art.schedule_s
         trace.overlap.schedule_device_s += art.schedule_device_s
-        y = _pipeline_batch_exec(x, art, w2, params.b, kernel_size, cfg,
-                                 grid, m, interp, trace, return_trace)
+        with use_tracer(tr):
+            y = _pipeline_batch_exec(x, art, w2, params.b, kernel_size,
+                                     cfg, grid, m, interp, trace,
+                                     return_trace)
         return (y, trace) if return_trace else y
 
     def prepass(i: int) -> _ImageArtifacts:
-        return _pipeline_prepass(coords[i], grid, m, p_pad, cfg, interp)
+        return _pipeline_prepass(coords[i], grid, m, p_pad, cfg, interp,
+                                 tracer=tr)
 
     def execute(i: int, art: _ImageArtifacts) -> jax.Array:
-        y_i, tr = _pipeline_exec(x[i], art, w2, params.b, kernel_size,
-                                 cfg, grid, m, p_pad, interp)
+        with use_tracer(tr):
+            y_i, im_tr = _pipeline_exec(x[i], art, w2, params.b,
+                                        kernel_size, cfg, grid, m, p_pad,
+                                        interp)
         trace.overlap.schedule_s += art.schedule_s
         trace.overlap.schedule_device_s += art.schedule_device_s
-        trace.images.append(tr)
+        trace.images.append(im_tr)
         return y_i
 
     outs = run_staged(n, prepass, execute, cfg.staging_depth,
-                      trace.overlap)
+                      trace.overlap, tracer=tr)
     y = jnp.stack(outs)
     return (y, trace) if return_trace else y

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.scheduler import FifoBuffer
 from repro.core.tiles import TileGrid
+from repro.obs import Histogram
 
 
 @dataclass(frozen=True)
@@ -86,35 +87,44 @@ class ImageTrace:
         return buf
 
 
-@dataclass
-class LatencyStats:
+class LatencyStats(Histogram):
     """Per-request latency accounting of a serving engine.
 
     Samples are submit->result wall seconds (queueing delay + every
     serving step the request waited through + its own service time), so
     the tail percentiles reflect what a client actually observes under
     the arrival process — the serving counterpart of the per-call
-    ``OverlapSpans``.
+    ``OverlapSpans``. A thin seconds-suffixed veneer over the telemetry
+    :class:`~repro.obs.Histogram`, so serving engines register it
+    directly in their :class:`~repro.obs.MetricsRegistry`.
+
+    Edge cases are well-defined rather than index arithmetic: an empty
+    snapshot reports ``None`` mean/percentiles, a single sample reports
+    that sample.
     """
 
-    samples_s: list[float] = field(default_factory=list)
+    def __init__(self, samples_s=None):
+        super().__init__(name="latency_s",
+                         help="submit->result request latency (s)")
+        for v in (samples_s or ()):
+            self.observe(float(v))
 
     def add(self, latency_s: float) -> None:
-        self.samples_s.append(float(latency_s))
+        self.observe(float(latency_s))
 
     @property
-    def count(self) -> int:
-        return len(self.samples_s)
+    def samples_s(self) -> list[float]:
+        return self.samples
 
     @property
-    def mean_s(self) -> float:
-        return float(np.mean(self.samples_s)) if self.samples_s else 0.0
+    def mean_s(self) -> float | None:
+        """Mean latency in seconds (None with no samples)."""
+        return self.mean
 
-    def percentile_s(self, q: float) -> float:
-        """q-th percentile latency in seconds (0 with no samples)."""
-        if not self.samples_s:
-            return 0.0
-        return float(np.percentile(np.asarray(self.samples_s), q))
+    def percentile_s(self, q: float) -> float | None:
+        """q-th percentile latency in seconds; None with no samples,
+        the sample itself with exactly one."""
+        return self.percentile(q)
 
     def summary(self) -> dict:
         """The stats block serving engines and benchmarks report."""
@@ -126,13 +136,22 @@ class LatencyStats:
             "p99_s": self.percentile_s(99.0),
         }
 
+    render = summary
+
 
 @dataclass
 class OverlapSpans:
     """Host-prepass vs device-execution overlap accounting of one executor
     call (the multi-image staging queue): how much of the host-side
     prepass (stage-1 offsets, TDT build, schedule, packing) was hidden
-    under device execution of earlier images."""
+    under device execution of earlier images.
+
+    No longer measured with bespoke timer bookkeeping: the executors
+    record ``prepass`` / ``prepass.wait`` / ``prepass.schedule`` spans
+    through the telemetry tracer (``repro.obs``) and this accounting is
+    re-derived from those spans via :meth:`add_span` /
+    :meth:`from_spans` — the trace fields are sums of span durations.
+    """
 
     prepass_s: float = 0.0       # total host prepass wall time
     prepass_wait_s: float = 0.0  # prepass time the execute loop blocked on
@@ -143,6 +162,39 @@ class OverlapSpans:
     # shrinks to packing only.
     schedule_s: float = 0.0          # TDT + schedule build wall time
     schedule_device_s: float = 0.0   # portion served by the device path
+
+    # Span name -> accumulated field; "prepass.schedule" additionally
+    # feeds schedule_device_s when its backend attr is "device".
+    SPAN_FIELDS = {"prepass": "prepass_s",
+                   "prepass.wait": "prepass_wait_s",
+                   "prepass.schedule": "schedule_s"}
+
+    def add_span(self, span) -> None:
+        """Fold one tracer span (or measured ``timed`` handle) into the
+        accounting; spans with unrelated names are ignored."""
+        field_name = self.SPAN_FIELDS.get(span.name)
+        if field_name is None:
+            return
+        setattr(self, field_name, getattr(self, field_name) + span.dur)
+        if (span.name == "prepass.schedule"
+                and span.attrs.get("backend") == "device"):
+            self.schedule_device_s += span.dur
+
+    @classmethod
+    def from_spans(cls, spans) -> "OverlapSpans":
+        """Re-derive the whole accounting from a span sequence."""
+        o = cls()
+        for s in spans:
+            o.add_span(s)
+        return o
+
+    def merge(self, other: "OverlapSpans") -> None:
+        """Accumulate another call's accounting (serving engines fold
+        per-step traces into engine totals)."""
+        self.prepass_s += other.prepass_s
+        self.prepass_wait_s += other.prepass_wait_s
+        self.schedule_s += other.schedule_s
+        self.schedule_device_s += other.schedule_device_s
 
     @property
     def host_overlap_frac(self) -> float:

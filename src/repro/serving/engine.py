@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.transformer import ModelConfig
+from repro.obs import MetricsRegistry, Tracer, get_tracer
 
 
 @dataclasses.dataclass
@@ -219,8 +220,10 @@ class DcnServingEngine:
 
     def __init__(self, params, cfg, *, graph=None, cache_size: int = 256,
                  slots: int = 4,
-                 clock: Callable[[], float] | None = None):
+                 clock: Callable[[], float] | None = None,
+                 tracer: Tracer | None = None):
         # Local imports keep the LM serving path import-light.
+        from repro.core.scheduler import host_schedule_builds
         from repro.models.dcn_models import DcnNetConfig
         from repro.runtime import (GraphConfig, LatencyStats, OverlapSpans,
                                    ScheduleCache, build_graph,
@@ -236,10 +239,30 @@ class DcnServingEngine:
         self.graph_cfg = graph or GraphConfig()
         self.net_graph = build_graph(cfg)
         self.cache = ScheduleCache(maxsize=cache_size)
-        self.requests = 0
-        self.images = 0
-        self.kernel_dispatches = 0
         self.overlap = OverlapSpans()
+        # Telemetry: the engine owns a MetricsRegistry (one snapshot()
+        # for everything ``stats`` reports) and routes executor + kernel
+        # spans into ``tracer`` (default: the current obs tracer — a
+        # no-op unless enabled). ``host_schedule_builds`` is process-
+        # wide, so the engine keeps a construction-time baseline and
+        # reports its own delta.
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.metrics = MetricsRegistry()
+        self._m_requests = self.metrics.counter(
+            "serving.requests", help="requests submitted")
+        self._m_images = self.metrics.counter(
+            "serving.images", help="images served")
+        self._m_dispatches = self.metrics.counter(
+            "serving.kernel_dispatches",
+            help="host-issued kernel dispatches")
+        self._m_steps = self.metrics.counter(
+            "serving.steps", help="continuous-batching serving steps")
+        self._host_builds = host_schedule_builds
+        self._host_builds0 = host_schedule_builds.count
+        # Per-step serving timeline (filled only when the tracer is
+        # enabled): step id, coalesced width, dispatch/DRAM accounting
+        # and the step's dispatch span walls — what bench_serving dumps.
+        self.timeline: list[dict] = []
         # Continuous-batching state. The step config pins the coalesced
         # dispatch mode to batch_fused (the ragged batch grid handles
         # whatever mix of slot images a step happens to coalesce) and is
@@ -252,20 +275,43 @@ class DcnServingEngine:
             [None] * self.n_slots)
         self._rid = itertools.count()
         self.latency = LatencyStats()
-        self.steps = 0
+        self.metrics.register("serving.latency_s", self.latency)
         self.last_trace = None
         self._step_cfg = clamp_tile_config(
             dataclasses.replace(self.graph_cfg, dispatch="batch_fused"),
             cfg.img_size, cfg.img_size)
 
+    # Counter-backed views keep the pre-registry attribute API
+    # (``eng.requests`` etc.) readable while the registry is the single
+    # writer.
+
+    @property
+    def requests(self) -> int:
+        return self._m_requests.count
+
+    @property
+    def images(self) -> int:
+        return self._m_images.count
+
+    @property
+    def kernel_dispatches(self) -> int:
+        return self._m_dispatches.count
+
+    @property
+    def steps(self) -> int:
+        return self._m_steps.count
+
+    @property
+    def host_schedule_builds(self) -> int:
+        """Host-side ``TileSchedule`` builds since this engine was
+        constructed (0 on the device scheduling hot path)."""
+        return self._host_builds.count - self._host_builds0
+
     def _absorb_trace(self, trace) -> None:
         """Fold one executor trace into the engine counters (caller must
         hold ``self._lock``)."""
-        self.kernel_dispatches += trace.kernel_dispatches
-        self.overlap.prepass_s += trace.overlap.prepass_s
-        self.overlap.prepass_wait_s += trace.overlap.prepass_wait_s
-        self.overlap.schedule_s += trace.overlap.schedule_s
-        self.overlap.schedule_device_s += trace.overlap.schedule_device_s
+        self._m_dispatches.inc(trace.kernel_dispatches)
+        self.overlap.merge(trace.overlap)
         self.last_trace = trace
 
     def infer(self, x: jax.Array) -> jax.Array:
@@ -277,10 +323,11 @@ class DcnServingEngine:
         y, trace = run_graph(self.params["convs"], self.net_graph, x,
                              config=gcfg,
                              max_displacement=self.cfg.max_displacement,
-                             return_trace=True, schedule_cache=self.cache)
+                             return_trace=True, schedule_cache=self.cache,
+                             tracer=self.tracer)
+        self._m_requests.inc()
+        self._m_images.inc(int(x.shape[0]))
         with self._lock:
-            self.requests += 1
-            self.images += int(x.shape[0])
             self._absorb_trace(trace)
         return _apply_head(self.params, self.cfg, y,
                            self.cfg.name == "segnet")
@@ -308,9 +355,11 @@ class DcnServingEngine:
             req = DcnRequest(rid=next(self._rid), x=x,
                              submit_s=self._clock(),
                              out=[None] * int(x.shape[0]))
-            self.requests += 1
+            self._m_requests.inc()
             for j in range(req.n_images):
                 self._queue.append((req, j))
+        self.tracer.instant("serve.submit", rid=req.rid,
+                            images=req.n_images)
         return req
 
     @property
@@ -333,26 +382,55 @@ class DcnServingEngine:
         from repro.models.dcn_models import _apply_head
         from repro.runtime import run_graph
 
-        with self._lock:
-            for i in range(self.n_slots):
-                if self._slots[i] is None and self._queue:
-                    self._slots[i] = self._queue.popleft()
-            occupied = [(i, s[0], s[1])
-                        for i, s in enumerate(self._slots) if s is not None]
+        tr = self.tracer
+        with tr.span("serve.admit", queue_depth=self.queue_depth):
+            with self._lock:
+                for i in range(self.n_slots):
+                    if self._slots[i] is None and self._queue:
+                        self._slots[i] = self._queue.popleft()
+                occupied = [(i, s[0], s[1])
+                            for i, s in enumerate(self._slots)
+                            if s is not None]
         if not occupied:
             return []
-        xb = jnp.asarray(np.stack([req.x[j] for _, req, j in occupied]))
-        y, trace = run_graph(self.params["convs"], self.net_graph, xb,
-                             config=self._step_cfg,
-                             max_displacement=self.cfg.max_displacement,
-                             return_trace=True, schedule_cache=self.cache)
-        out = np.asarray(_apply_head(self.params, self.cfg, y,
-                                     self.cfg.name == "segnet"))
+        step_id = self._m_steps.count
+        hits0 = self.cache.info()["image_hits"] if tr.enabled else 0
+        mark = len(tr) if tr.enabled else 0
+        with tr.timed("serve.step", step=step_id,
+                      width=len(occupied)) as ssp:
+            xb = jnp.asarray(np.stack([req.x[j]
+                                       for _, req, j in occupied]))
+            y, trace = run_graph(
+                self.params["convs"], self.net_graph, xb,
+                config=self._step_cfg,
+                max_displacement=self.cfg.max_displacement,
+                return_trace=True, schedule_cache=self.cache,
+                tracer=tr)
+            out = np.asarray(_apply_head(self.params, self.cfg, y,
+                                         self.cfg.name == "segnet"))
+            ssp.set(dispatches=trace.kernel_dispatches,
+                    dram_bytes=trace.total_dram_bytes)
+        if tr.enabled:
+            dispatch_spans = [s for s in tr.spans_since(mark)
+                              if s.name.startswith("dispatch.")]
+            self.timeline.append({
+                "step": step_id,
+                "width": len(occupied),
+                "wall_s": ssp.dur,
+                "dispatches": trace.kernel_dispatches,
+                "dram_bytes": trace.total_dram_bytes,
+                "image_hits": (self.cache.info()["image_hits"]
+                               - hits0),
+                "schedule_backend": self._step_cfg.schedule_backend,
+                "dispatch_spans": [
+                    {"name": s.name, "dur_s": s.dur, **s.attrs}
+                    for s in dispatch_spans],
+            })
         finished: list[DcnRequest] = []
         now = self._clock()
         with self._lock:
-            self.steps += 1
-            self.images += len(occupied)
+            self._m_steps.inc()
+            self._m_images.inc(len(occupied))
             self._absorb_trace(trace)
             for k, (i, req, j) in enumerate(occupied):
                 req.out[j] = out[k]
@@ -368,13 +446,15 @@ class DcnServingEngine:
         """Serve until queue and slots are empty. Returns every request
         that finished during the drain, each exactly once."""
         finished: list[DcnRequest] = []
-        for _ in range(max_steps):
-            finished.extend(self.step())
-            with self._lock:
-                idle = (not self._queue
-                        and all(s is None for s in self._slots))
-            if idle:
-                break
+        with self.tracer.span("serve.drain") as sp:
+            for _ in range(max_steps):
+                finished.extend(self.step())
+                with self._lock:
+                    idle = (not self._queue
+                            and all(s is None for s in self._slots))
+                if idle:
+                    break
+            sp.set(finished=len(finished))
         return finished
 
     @property
@@ -387,10 +467,14 @@ class DcnServingEngine:
         (partial batch hits skip scheduling only for the hit images),
         and ``dispatches_per_batch`` reports the average host-issued
         kernel dispatches per served request batch.
+
+        The whole snapshot is taken under the engine lock (the cache
+        keeps its own), so a concurrent submitter can never tear the
+        view: counters and queue depth are read at one instant.
         """
-        info = self.cache.info()
-        total = info["hits"] + info["misses"]
         with self._lock:
+            info = self.cache.info()
+            total = info["hits"] + info["misses"]
             return {
                 "requests": self.requests,
                 "images": self.images,
@@ -417,5 +501,30 @@ class DcnServingEngine:
                 "slots": self.n_slots,
                 "queue_depth": len(self._queue),
                 "steps": self.steps,
+                "host_schedule_builds": self.host_schedule_builds,
                 "latency": self.latency.summary(),
             }
+
+    def metrics_snapshot(self) -> dict[str, Any]:
+        """One machine-readable view of every engine metric: the
+        registry counters/histograms plus gauges synced at call time
+        (cache state + hit rates, queue/slot depths, overlap fractions,
+        the engine-relative ``host_schedule_builds`` delta). Every value
+        ``stats`` reports — and every counter the benchmark gates —
+        appears here under a stable name."""
+        m = self.metrics
+        with self._lock:
+            self.cache.publish(m, prefix="schedule_cache")
+            m.gauge("serving.queue_depth").set(len(self._queue))
+            m.gauge("serving.slots").set(self.n_slots)
+            m.gauge("serving.host_schedule_builds").set(
+                self.host_schedule_builds)
+            req = self._m_requests.count
+            m.gauge("serving.dispatches_per_batch").set(
+                self._m_dispatches.count / req if req else 0.0)
+            m.gauge("serving.host_overlap_frac").set(
+                self.overlap.host_overlap_frac)
+            m.gauge("serving.schedule_s").set(self.overlap.schedule_s)
+            m.gauge("serving.schedule_device_frac").set(
+                self.overlap.schedule_device_frac)
+        return m.snapshot()

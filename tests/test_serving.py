@@ -203,6 +203,57 @@ class TestContinuousBatching:
         assert s["latency"]["count"] == total
         assert all(r.done for r in reqs)
 
+    def test_stats_snapshot_consistent_under_concurrency(self, dcn_setup):
+        """``stats`` is one atomic snapshot taken under the engine lock:
+        readers racing submitters and the serving loop never observe a
+        torn view (e.g. a request counted but its queue slot missing, or
+        more finished latencies than admitted requests)."""
+        eng = _engine(dcn_setup, slots=4)
+        n_threads, per_thread = 3, 3
+        stop = threading.Event()
+        torn: list[str] = []
+
+        def client(seed):
+            for k in range(per_thread):
+                eng.submit(_images(1, seed=500 * seed + k))
+
+        def reader():
+            while not stop.is_set():
+                s = eng.stats
+                # in_flight = admitted - finished; both legs come from
+                # the same locked snapshot, so it can never go negative
+                # or exceed the admitted total.
+                in_flight = s["requests"] - s["latency"]["count"]
+                if not 0 <= in_flight <= n_threads * per_thread:
+                    torn.append(f"in_flight={in_flight}")
+                if s["images"] > s["requests"]:
+                    torn.append(f"images={s['images']}>{s['requests']}")
+                if s["queue_depth"] < 0:
+                    torn.append(f"queue_depth={s['queue_depth']}")
+
+        submitters = [threading.Thread(target=client, args=(t,))
+                      for t in range(n_threads)]
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for t in submitters + readers:
+            t.start()
+        done: list = []
+        while any(t.is_alive() for t in submitters):
+            done.extend(eng.step())
+        for t in submitters:
+            t.join()
+        done.extend(eng.drain())
+        stop.set()
+        for t in readers:
+            t.join()
+
+        assert torn == []
+        total = n_threads * per_thread
+        assert len(done) == total
+        s = eng.stats
+        assert s["requests"] == total
+        assert s["latency"]["count"] == total
+        assert s["queue_depth"] == 0
+
     def test_step_trace_equals_dram_simulator(self, dcn_setup):
         """The coalesced serving step's executed trace must equal the
         network DRAM simulator exactly, per image — coalescing shares
@@ -299,8 +350,12 @@ class TestDecodeEngineRegressions:
 class TestLatencyStats:
     def test_percentiles_and_summary(self):
         ls = LatencyStats()
-        assert ls.summary() == {"count": 0, "mean_s": 0.0, "p50_s": 0.0,
-                                "p95_s": 0.0, "p99_s": 0.0}
+        # Empty stats have NO percentiles: None, not a fabricated 0.0
+        # that would read as a real (excellent) latency downstream.
+        assert ls.summary() == {"count": 0, "mean_s": None, "p50_s": None,
+                                "p95_s": None, "p99_s": None}
+        assert ls.mean_s is None
+        assert ls.percentile_s(99) is None
         for v in range(1, 101):
             ls.add(v / 100.0)
         s = ls.summary()
@@ -308,6 +363,15 @@ class TestLatencyStats:
         assert abs(s["mean_s"] - 0.505) < 1e-9
         assert s["p50_s"] <= s["p95_s"] <= s["p99_s"] <= 1.0
         assert abs(ls.percentile_s(50) - 0.505) < 0.02
+
+    def test_single_sample_is_every_percentile(self):
+        ls = LatencyStats()
+        ls.add(0.25)
+        for q in (0, 1, 50, 95, 99, 100):
+            assert ls.percentile_s(q) == 0.25
+        s = ls.summary()
+        assert s == {"count": 1, "mean_s": 0.25, "p50_s": 0.25,
+                     "p95_s": 0.25, "p99_s": 0.25}
 
 
 class TestPartitionMemo:
