@@ -32,13 +32,24 @@ the CI bench-smoke job) if:
     engine's ``metrics_snapshot()`` disagrees with ``stats`` — the
     trace / timeline / metrics snapshot are written as
     ``TELEMETRY_serving_*.json`` next to the bench artifacts;
+  * the resilience chaos bench (ISSUE 8 gate) loses or duplicates a
+    request, fails a request with an untyped error, deadlocks, lets
+    healthy-request p99 exceed 1.5x the fault-free baseline, breaks
+    the executor-trace == DRAM-simulator cross-check on a non-faulted
+    step, or fails the isolation / backpressure scenario checks;
   * ``--compare BASELINE_DIR`` is given (previous main-branch
     ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or a
     dispatch count (batched per-image, batch-fused at batch>1, or
     serving dispatches/step) regress more than 10% against the
     baseline, or serving requests/sec or the serving schedule-cache
     image hit rate drops more than 10% below it (direction-aware:
-    rps and hit rate are higher-is-better).
+    rps and hit rate are higher-is-better), or the chaos bench loses
+    a request (fails on >0) or its healthy p99 ratio climbs high.
+
+``--suite {all,core,resilience}`` selects which benches run: ``core``
+is the perf suite above, ``resilience`` only the chaos bench (its own
+CI leg), ``all`` (default) both. Gates and ``--compare`` checks apply
+only to suites that ran.
 """
 
 from __future__ import annotations
@@ -53,8 +64,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:          # allow `python benchmarks/smoke.py`
     sys.path.insert(0, _ROOT)
 
-from benchmarks import (bench_fusion, bench_graph, bench_scheduling,
-                        bench_serving)
+from benchmarks import (bench_fusion, bench_graph, bench_resilience,
+                        bench_scheduling, bench_serving)
 
 TINY_TDT = dict(h=16, w=16, c=16, tiles_per_side=4)
 
@@ -96,6 +107,10 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
     rc = 0
     # direction "lower": regression is new > base*1.10 (counts, loads);
     # direction "higher": regression is new < base*0.90 (requests/sec).
+    # An optional 5th element is an absolute floor on the limit — used
+    # for inherently noisy ratios so run-to-run jitter below the floor
+    # can never flake the gate (requests_lost has no floor: baseline is
+    # 0, so ANY lost request is limit-exceeding, i.e. fails on >0).
     checks = [
         ("BENCH_scheduling.json", "scheduled DRAM tile loads",
          lambda p: int(_record(p, "fig16_layer")["scheduled_loads"]),
@@ -110,8 +125,14 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
          lambda p: float(p["serving_dispatches_per_step"]), "lower"),
         ("BENCH_serving.json", "serving image hit rate",
          lambda p: float(p["serving_image_hit_rate"]), "higher"),
+        ("BENCH_resilience.json", "resilience requests lost",
+         lambda p: int(p["resilience_requests_lost"]), "lower"),
+        ("BENCH_resilience.json", "resilience healthy p99 ratio",
+         lambda p: float(p["resilience_p99_ratio"]), "lower", 1.5),
     ]
-    for fname, what, extract, direction in checks:
+    for fname, what, extract, direction, *floor in checks:
+        if fname not in suites:
+            continue          # suite not run (--suite core/resilience)
         path = os.path.join(baseline_dir, fname)
         if not os.path.exists(path):
             print(f"WARNING: no baseline {path}; skipping {what} check")
@@ -137,6 +158,8 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
             regressed = new < limit
         else:
             limit = base * 1.10
+            if floor:
+                limit = max(limit, floor[0])
             regressed = new > limit
         verdict = "REGRESSED" if regressed else "ok"
         print(f"bench-regression: {what} new={new} baseline={base} "
@@ -146,65 +169,16 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
     return rc
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default=".", help="output directory")
-    ap.add_argument("--compare", default=None, metavar="BASELINE_DIR",
-                    help="directory of previous-main BENCH_*.json "
-                         "artifacts; fail on >10%% regression of "
-                         "scheduled loads / dispatch count")
-    args = ap.parse_args(argv)
-    os.makedirs(args.out, exist_ok=True)
-
-    suites = {
-        "BENCH_scheduling.json": _collect("scheduling", [
-            (bench_scheduling.run, dict(tdt_kwargs=TINY_TDT, channels=16,
-                                        c_out=16, buffer_bytes=4096)),
-            (bench_scheduling.run_executor, dict(h=16, w=16, c=8, c_out=8,
-                                                 tile=8, buffer_tiles=2)),
-            (bench_scheduling.run_backends, dict(h=16, w=16, c=8, c_out=8,
-                                                 tile=8, buffer_tiles=2,
-                                                 repeats=3)),
-            (bench_scheduling.run_batch_fused, dict(h=16, w=16, c=8,
-                                                    c_out=8, tile=8,
-                                                    buffer_tiles=2,
-                                                    batch=4, repeats=2)),
-        ]),
-        "BENCH_fusion.json": _collect("fusion", [
-            (bench_fusion.run, dict(tdt_kwargs=TINY_TDT, channels=16,
-                                    c_out=16)),
-            (bench_fusion.run_executor, dict(h=16, w=16, c=8, c_out=8,
-                                             tile=8)),
-        ]),
-        "BENCH_graph.json": _collect("graph", [
-            (bench_graph.run, dict(img=13, n_deform=2, width_mult=0.125,
-                                   tile=4)),
-            (bench_graph.run_dispatch, dict(img=13, n_deform=2,
-                                            width_mult=0.125, tile=4,
-                                            batch=4, repeats=2)),
-            (bench_graph.run_model_backend, dict(img=16, n_deform=2,
-                                                 width_mult=0.125, tile=4)),
-        ]),
-        "BENCH_serving.json": _collect("serving", [
-            (bench_serving.run, dict(
-                img=13, n_deform=2, width_mult=0.125, tile=4, slots=8,
-                n_requests=16,
-                trace_out=os.path.join(
-                    args.out, "TELEMETRY_serving_trace.json"),
-                timeline_out=os.path.join(
-                    args.out, "TELEMETRY_serving_timeline.json"),
-                metrics_out=os.path.join(
-                    args.out, "TELEMETRY_serving_metrics.json"))),
-        ]),
-    }
-
-    # Dispatch-count regression gate: the batched grid dispatch must stay
-    # strictly below the per-tile baseline (ISSUE 3 acceptance). The CI
-    # bench-smoke job fails on the nonzero exit.
+def _gate_graph(suites: dict) -> int:
+    """ISSUE 3 + 5 gates: the batched grid dispatch must stay strictly
+    below the per-tile baseline, and at batch=4 the whole-batch fused
+    path must issue exactly ONE kernel dispatch per layer segment,
+    strictly below the per-image batched count."""
+    if "BENCH_graph.json" not in suites:
+        return 0
     rc = 0
     graph_payload = suites["BENCH_graph.json"]
-    bench = next((r for r in graph_payload["records"]
-                  if r["label"] == "dispatch_bench"), None)
+    bench = _record(graph_payload, "dispatch_bench")
     if bench is None:
         print("ERROR: dispatch_bench record missing from bench_graph")
         rc = 1
@@ -223,11 +197,7 @@ def main(argv=None) -> int:
             print("ERROR: batched dispatches exceed layer-segment bound")
             rc = 1
 
-    # Batch-fused dispatch gate (ISSUE 5 acceptance): at batch=4 the
-    # whole-batch fused path must issue exactly ONE kernel dispatch per
-    # layer segment, strictly below the per-image batched count.
-    bf = next((r for r in graph_payload["records"]
-               if r["label"] == "batch_fused_bench"), None)
+    bf = _record(graph_payload, "batch_fused_bench")
     if bf is None:
         print("ERROR: batch_fused_bench record missing from bench_graph")
         rc = 1
@@ -247,10 +217,17 @@ def main(argv=None) -> int:
                   f"{bf_dispatches} >= per-image batched "
                   f"{bf['batched_dispatches']}")
             rc = 1
+    return rc
 
-    # Scheduling-backend gate (ISSUE 4 acceptance): the device scheduler
-    # must be bit-exact vs the host and strictly reduce the host-side
-    # scheduling time per image.
+
+def _gate_scheduling(suites: dict) -> int:
+    """ISSUE 4 gate: the device scheduler must be bit-exact vs the host
+    and strictly reduce the host-side scheduling time per image; the
+    pipeline batch-fused records must match batched numerics at one
+    dispatch per batch."""
+    if "BENCH_scheduling.json" not in suites:
+        return 0
+    rc = 0
     sched_payload = suites["BENCH_scheduling.json"]
     backend = _record(sched_payload, "sched_backend")
     if backend is None:
@@ -274,9 +251,6 @@ def main(argv=None) -> int:
                   "scheduling time per image")
             rc = 1
 
-    # Pipeline-level batch-fused records: one dispatch per batch, both
-    # backends numerically matching per-image batched dispatch, and the
-    # device backend's host prepass residue archived for the trajectory.
     bf_sched = [r for r in sched_payload["records"]
                 if r["label"] == "batch_fused"]
     if not bf_sched:
@@ -296,12 +270,17 @@ def main(argv=None) -> int:
                   f"({r['dispatches_per_batch']}) not below per-image "
                   f"batched ({r['batched_dispatches']})")
             rc = 1
+    return rc
 
-    # Continuous-batching serving gate (ISSUE 6 acceptance): with a slot
-    # pool >= 4, coalesced batch-fused serving must beat the sequential
-    # serve-one-at-a-time baseline by >= 1.5x requests/sec on the
-    # open-loop arrival benchmark; latency percentiles are archived for
-    # the perf trajectory.
+
+def _gate_serving(suites: dict) -> int:
+    """ISSUE 6 + 7 gates: continuous-batching serving must beat the
+    sequential baseline >= 1.5x at slot pool >= 4, and the telemetry
+    (Chrome trace schema, serve.step span wall, metrics snapshot vs
+    stats) must hold together."""
+    if "BENCH_serving.json" not in suites:
+        return 0
+    rc = 0
     serving_payload = suites["BENCH_serving.json"]
     sv = _record(serving_payload, "serving_bench")
     if sv is None:
@@ -326,10 +305,6 @@ def main(argv=None) -> int:
                   f"slot pool {sv['slots']}")
             rc = 1
 
-    # Telemetry gate (ISSUE 7 acceptance): the exported Chrome trace
-    # must be schema-valid, the serve.step span wall must agree with the
-    # measured step wall within 10%, and the engine's metrics snapshot
-    # must reproduce every counter `stats` reports.
     tr_rec = _record(serving_payload, "serving_trace")
     if tr_rec is None:
         print("ERROR: serving_trace record missing from bench_serving")
@@ -362,6 +337,167 @@ def main(argv=None) -> int:
             print("ERROR: engine metrics_snapshot() disagrees with "
                   "engine stats")
             rc = 1
+    return rc
+
+
+def _gate_resilience(suites: dict) -> int:
+    """ISSUE 8 gate: under the seeded chaos campaign the engine must
+    lose/duplicate zero requests, fail every faulted request with a
+    typed error, never deadlock, keep healthy-request p99 <= 1.5x the
+    fault-free baseline, keep the executor-trace == DRAM-simulator
+    cross-check exact on non-faulted steps, and pass the isolation and
+    backpressure scenario checks."""
+    if "BENCH_resilience.json" not in suites:
+        return 0
+    rc = 0
+    payload = suites["BENCH_resilience.json"]
+    rb = _record(payload, "resilience_bench")
+    if rb is None:
+        print("ERROR: resilience_bench record missing from "
+              "bench_resilience")
+        rc = 1
+    else:
+        lost = int(rb["requests_lost"])
+        duplicated = int(rb["duplicated"])
+        ratio = float(rb["healthy_p99_ratio"])
+        payload["resilience_requests_lost"] = lost
+        payload["resilience_duplicated"] = duplicated
+        payload["resilience_p99_ratio"] = ratio
+        payload["resilience_p99_base_s"] = float(rb["p99_base_s"])
+        payload["resilience_p99_faulted_s"] = float(rb["p99_faulted_s"])
+        if lost > 0:
+            print(f"ERROR: chaos bench lost {lost} request(s)")
+            rc = 1
+        if duplicated > 0:
+            print(f"ERROR: chaos bench resolved {duplicated} request(s) "
+                  f"more than once")
+            rc = 1
+        if rb["typed_errors"] != "yes":
+            print("ERROR: a faulted request failed with an untyped error "
+                  "(not RequestFailedError)")
+            rc = 1
+        if rb["deadlocked"] != "no":
+            print("ERROR: chaos bench deadlocked (drain exhausted its "
+                  "step budget)")
+            rc = 1
+        if ratio > 1.5:
+            print(f"ERROR: healthy-request p99 ratio {ratio:.3f} > 1.5x "
+                  f"fault-free baseline")
+            rc = 1
+    rf = _record(payload, "resilience_faults")
+    if rf is None:
+        print("ERROR: resilience_faults record missing from "
+              "bench_resilience")
+        rc = 1
+    else:
+        payload["resilience_faults_fired"] = int(rf["total_fired"])
+        payload["resilience_watchdog_failovers"] = int(
+            rf["watchdog_failovers"])
+        if int(rf["total_fired"]) == 0:
+            print("ERROR: chaos campaign fired zero faults — the bench "
+                  "gated nothing")
+            rc = 1
+    re_rec = _record(payload, "resilience_engine")
+    if re_rec is None:
+        print("ERROR: resilience_engine record missing from "
+              "bench_resilience")
+        rc = 1
+    else:
+        payload["resilience_trace_checked"] = int(re_rec["trace_checked"])
+        if re_rec["trace_exact"] != "yes":
+            print("ERROR: executor trace != DRAM simulator on a "
+                  "non-faulted chaos step")
+            rc = 1
+        if int(re_rec["trace_checked"]) == 0:
+            print("ERROR: chaos run cross-checked zero traces")
+            rc = 1
+        if re_rec["isolation_ok"] != "yes":
+            print("ERROR: tagged fault was not isolated to the offending "
+                  "request (step-mates lost or inexact)")
+            rc = 1
+        if re_rec["backpressure_ok"] != "yes":
+            print("ERROR: backpressure/deadline scenario failed "
+                  "(shed/expired requests not accounted exactly once)")
+            rc = 1
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=".", help="output directory")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_DIR",
+                    help="directory of previous-main BENCH_*.json "
+                         "artifacts; fail on >10%% regression of "
+                         "scheduled loads / dispatch count")
+    ap.add_argument("--suite", default="all",
+                    choices=("all", "core", "resilience"),
+                    help="which bench suites to run (default: all)")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    suites = {}
+    if args.suite in ("all", "core"):
+        suites = {
+            "BENCH_scheduling.json": _collect("scheduling", [
+                (bench_scheduling.run, dict(tdt_kwargs=TINY_TDT,
+                                            channels=16, c_out=16,
+                                            buffer_bytes=4096)),
+                (bench_scheduling.run_executor, dict(h=16, w=16, c=8,
+                                                     c_out=8, tile=8,
+                                                     buffer_tiles=2)),
+                (bench_scheduling.run_backends, dict(h=16, w=16, c=8,
+                                                     c_out=8, tile=8,
+                                                     buffer_tiles=2,
+                                                     repeats=3)),
+                (bench_scheduling.run_batch_fused, dict(h=16, w=16, c=8,
+                                                        c_out=8, tile=8,
+                                                        buffer_tiles=2,
+                                                        batch=4,
+                                                        repeats=2)),
+            ]),
+            "BENCH_fusion.json": _collect("fusion", [
+                (bench_fusion.run, dict(tdt_kwargs=TINY_TDT, channels=16,
+                                        c_out=16)),
+                (bench_fusion.run_executor, dict(h=16, w=16, c=8, c_out=8,
+                                                 tile=8)),
+            ]),
+            "BENCH_graph.json": _collect("graph", [
+                (bench_graph.run, dict(img=13, n_deform=2,
+                                       width_mult=0.125, tile=4)),
+                (bench_graph.run_dispatch, dict(img=13, n_deform=2,
+                                                width_mult=0.125, tile=4,
+                                                batch=4, repeats=2)),
+                (bench_graph.run_model_backend, dict(img=16, n_deform=2,
+                                                     width_mult=0.125,
+                                                     tile=4)),
+            ]),
+            "BENCH_serving.json": _collect("serving", [
+                (bench_serving.run, dict(
+                    img=13, n_deform=2, width_mult=0.125, tile=4, slots=8,
+                    n_requests=16,
+                    trace_out=os.path.join(
+                        args.out, "TELEMETRY_serving_trace.json"),
+                    timeline_out=os.path.join(
+                        args.out, "TELEMETRY_serving_timeline.json"),
+                    metrics_out=os.path.join(
+                        args.out, "TELEMETRY_serving_metrics.json"))),
+            ]),
+        }
+    if args.suite in ("all", "resilience"):
+        suites["BENCH_resilience.json"] = _collect("resilience", [
+            (bench_resilience.run, dict(img=13, n_deform=2,
+                                        width_mult=0.125, tile=4,
+                                        slots=4, n_requests=24,
+                                        fault_rate=0.1, seed=0)),
+        ])
+
+    # Gates apply only to suites that ran (--suite). The CI bench-smoke
+    # job fails on the nonzero exit.
+    rc = 0
+    rc = max(rc, _gate_graph(suites))
+    rc = max(rc, _gate_scheduling(suites))
+    rc = max(rc, _gate_serving(suites))
+    rc = max(rc, _gate_resilience(suites))
 
     if args.compare:
         rc = max(rc, _compare_baseline(args.compare, suites))

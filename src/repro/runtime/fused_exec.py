@@ -46,6 +46,7 @@ tests/test_batched_dispatch.py pin the numerics vs the XLA reference.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any
 
 import jax
@@ -114,6 +115,13 @@ class GraphConfig:
     # on a worker thread while image i executes (the default), >2 queues
     # deeper (rarely helps: prepass is single-threaded host work).
     staging_depth: int = 2
+    # Staging-worker watchdog deadline (seconds); None = wait forever.
+    # A staged prepass that misses it triggers failover to synchronous
+    # prepass for the rest of the run (see pipeline.run_staged).
+    watchdog_s: float | None = None
+    # Fault injector (repro.testing.faults.FaultInjector) — test/bench
+    # only, excluded from config equality.
+    faults: Any = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         validate_dispatch_config(self)
@@ -367,6 +375,10 @@ def _group_schedule_artifacts(
             # different (tile_h, tile_w) must never collide.
             key = (chain_digest(digests, grid), grid.th, grid.tw, m,
                    cfg.schedule)
+            if cfg.faults is not None:
+                salt = cfg.faults.miss_salt()
+                if salt is not None:
+                    key = key + (salt,)
             (b_layers, sched), hit = cache.get_or_build(key, build)
         ssp.set(cached=hit)
     schedule_s = ssp.dur
@@ -791,6 +803,8 @@ def _group_batch_prepass(
     with tr.timed("prepass.schedule", backend=cfg.schedule_backend,
                   batch=n) as ssp:
         for i in range(n):
+            if cfg.faults is not None:
+                cfg.faults.check("prepass", image=i)
             if cache is None:
                 bundles.append(build_bundle(i))
                 hits.append(None)
@@ -804,6 +818,10 @@ def _group_batch_prepass(
                                                  grid))
             key = (chain_digest(digests, grid), grid.th, grid.tw, m,
                    cfg.schedule, "dense")
+            if cfg.faults is not None:
+                salt = cfg.faults.miss_salt()
+                if salt is not None:
+                    key = key + (salt,)
             bundle, hit = cache.get_or_build(key,
                                              lambda i=i: build_bundle(i))
             bundles.append(bundle)
@@ -852,6 +870,8 @@ def _exec_group_batch_fused(
     layer segment (the batch-fused kernel for DCN layers, one batched
     XLA conv for standard layers)."""
     n = planes.shape[0]
+    if cfg.faults is not None:
+        cfg.faults.check("dispatch", images=n)
     grid = art.grid
     h, w = grid.h, grid.w
     tp = grid.th * grid.tw
@@ -974,23 +994,37 @@ def _run_graph_batch_fused(
             seen = True
 
     # The dense stage-1 chain state, advanced sequentially by the prepass
-    # (run_staged's single worker preserves submission order).
-    pre_state = {"plane": x}
+    # (run_staged's single worker preserves submission order). The epoch
+    # guard exists for watchdog failover: after a stuck worker is
+    # abandoned and the same segment re-runs synchronously, the worker
+    # may still wake and finish — its read is rejected (epoch moved on)
+    # or its commit is discarded, so the chain state can never regress
+    # or double-advance.
+    pre_lock = threading.Lock()
+    pre_state = {"plane": x, "epoch": 0}
 
     def prepass(s: int):
         seg = segments[s]
+        with pre_lock:
+            if pre_state["epoch"] != s:
+                return None        # stale duplicate from an abandoned worker
+            plane_in = pre_state["plane"]
         if isinstance(seg, (PoolNode, UpsampleNode)):
-            if deform_after[s]:
-                pre_state["plane"] = apply_boundary_batch(
-                    pre_state["plane"], seg)
-            return None
-        grid = TileGrid(seg.h, seg.w, min(th, seg.h), min(tw, seg.w))
-        m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles
-        art, plane = _group_batch_prepass(
-            pre_state["plane"], seg, convs, grid, m, cfg, max_displacement,
-            cache, need_out_plane=deform_after[s], interp=interpret,
-            tracer=tr)
-        pre_state["plane"] = plane
+            art = None
+            plane = (apply_boundary_batch(plane_in, seg)
+                     if deform_after[s] else plane_in)
+        else:
+            grid = TileGrid(seg.h, seg.w, min(th, seg.h), min(tw, seg.w))
+            m = (grid.num_tiles if cfg.buffer_tiles is None
+                 else cfg.buffer_tiles)
+            art, plane = _group_batch_prepass(
+                plane_in, seg, convs, grid, m, cfg, max_displacement,
+                cache, need_out_plane=deform_after[s], interp=interpret,
+                tracer=tr)
+        with pre_lock:
+            if pre_state["epoch"] == s:
+                pre_state["plane"] = plane
+                pre_state["epoch"] = s + 1
         return art
 
     exec_state = {"plane": x, "group": 0}
@@ -1016,7 +1050,8 @@ def _run_graph_batch_fused(
         return None
 
     run_staged(len(segments), prepass, execute, cfg.staging_depth,
-               trace.overlap, tracer=tr)
+               trace.overlap, tracer=tr, watchdog_s=cfg.watchdog_s,
+               faults=cfg.faults)
     # Keep trace.groups image-major like the per-image executors.
     pending.sort(key=lambda g: (g.image, g.group))
     trace.groups.extend(pending)
@@ -1093,10 +1128,14 @@ def run_graph(
         return (y, trace) if return_trace else y
 
     def prepass(i: int):
+        if cfg.faults is not None:
+            cfg.faults.check("prepass", image=i)
         return _image_prepass(x[i], segments, convs, cfg, max_displacement,
                               cache, interp=interpret, tracer=tr)
 
     def execute_image(i: int, arts) -> jax.Array:
+        if cfg.faults is not None:
+            cfg.faults.check("dispatch", image=i)
         plane = x[i]
         g = 0
         for seg, art in zip(segments, arts):
@@ -1116,7 +1155,8 @@ def run_graph(
 
     with use_tracer(tr):
         outs = run_staged(n, prepass, execute_image, cfg.staging_depth,
-                          trace.overlap, tracer=tr)
+                          trace.overlap, tracer=tr,
+                          watchdog_s=cfg.watchdog_s, faults=cfg.faults)
     y = jnp.stack(outs)
     return (y, trace) if return_trace else y
 

@@ -32,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +48,7 @@ from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
                                      dcn_fused_tile)
 from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.kernels.ops import round_up
-from repro.obs import Tracer, get_tracer, use_tracer
+from repro.obs import Tracer, default_registry, get_tracer, use_tracer
 from repro.runtime.cache import coords_digest, default_schedule_cache
 from repro.runtime.packing import (NeighbourTables, build_neighbour_tables,
                                    pack_batch_schedules, pack_output_tile,
@@ -63,8 +65,18 @@ def resolve_interpret(flag: bool | None) -> bool:
     return bool(flag)
 
 
+# Process-wide like core.scheduler.host_schedule_builds: callers that
+# need a per-engine view keep a construction-time baseline and report
+# their delta.
+staging_watchdog_failovers = default_registry().counter(
+    "staging.watchdog_failovers",
+    help="staged prepasses that missed the watchdog deadline and were "
+         "re-run synchronously on the driving thread")
+
+
 def run_staged(n: int, prepass, execute, depth: int, overlap,
-               tracer: Tracer | None = None) -> list:
+               tracer: Tracer | None = None,
+               watchdog_s: float | None = None, faults=None) -> list:
     """The multi-image staging queue shared by both executors.
 
     ``prepass(i)`` builds image i's host-side artifacts, ``execute(i,
@@ -76,10 +88,22 @@ def run_staged(n: int, prepass, execute, depth: int, overlap,
     ``prepass`` / ``prepass.wait`` spans this queue records through
     ``tracer`` (always measured; stored only when the tracer is
     enabled). Returns the per-image execute results.
+
+    ``watchdog_s`` bounds each wait on the staging worker: a prepass
+    that does not deliver within the deadline is treated as wedged — the
+    queue fails over to synchronous prepass for the rest of the run
+    (``staging.watchdog_failover`` instant marker + process counter),
+    the stuck worker is abandoned (never joined), and batch-fused
+    callers' sequential prepass state stays consistent because their
+    epoch-guarded commit discards any late duplicate (see
+    ``_run_graph_batch_fused``). ``faults`` is a test-only injector
+    (``repro.testing.faults``) consulted for ``worker_stall`` sleeps.
     """
     tr = tracer if tracer is not None else get_tracer()
 
     def staged(i: int):
+        if faults is not None:
+            faults.stall("worker_stall")
         with tr.timed("prepass", unit=i) as sp:
             art = prepass(i)
         return art, sp
@@ -95,7 +119,9 @@ def run_staged(n: int, prepass, execute, depth: int, overlap,
             overlap.add_span(wsp)
             outs.append(execute(i, art))
         return outs
-    with ThreadPoolExecutor(max_workers=1) as pool:
+    pool = ThreadPoolExecutor(max_workers=1)
+    failed_over = False
+    try:
         futs: deque = deque()
         nxt = 0
         while nxt < n and len(futs) < depth - 1:
@@ -103,13 +129,29 @@ def run_staged(n: int, prepass, execute, depth: int, overlap,
             nxt += 1
         for i in range(n):
             with tr.timed("prepass.wait", unit=i) as wsp:
-                art, sp = futs.popleft().result()
+                if failed_over or not futs:
+                    art, sp = staged(i)
+                else:
+                    try:
+                        art, sp = futs.popleft().result(
+                            timeout=watchdog_s)
+                    except _FutTimeout:
+                        failed_over = True
+                        staging_watchdog_failovers.bump()
+                        tr.instant("staging.watchdog_failover", unit=i)
+                        art, sp = staged(i)
             overlap.add_span(sp)
             overlap.add_span(wsp)
-            if nxt < n:
+            if not failed_over and nxt < n:
                 futs.append(pool.submit(staged, nxt))
                 nxt += 1
             outs.append(execute(i, art))
+    finally:
+        # A wedged worker would hang the context-manager shutdown; after
+        # a failover, abandon it (queued-but-unstarted work is
+        # cancelled, the running thread exits on its own — injected
+        # stalls are finite by contract).
+        pool.shutdown(wait=not failed_over, cancel_futures=failed_over)
     return outs
 
 
@@ -125,6 +167,9 @@ def validate_dispatch_config(cfg) -> None:
     if cfg.staging_depth < 1:
         raise ValueError(
             f"staging_depth must be >= 1, got {cfg.staging_depth}")
+    if cfg.watchdog_s is not None and cfg.watchdog_s <= 0:
+        raise ValueError(
+            f"watchdog_s must be > 0 (or None), got {cfg.watchdog_s}")
 
 
 def clamp_tile_config(cfg, h: int, w: int):
@@ -163,6 +208,14 @@ class PipelineConfig:
     # Images staged ahead: 1 = serial, 2 (default) = prepass image i+1 on
     # a worker thread while image i executes.
     staging_depth: int = 2
+    # Staging-worker watchdog: None = wait forever (pre-resilience
+    # behavior); a float bounds each wait on a staged prepass, after
+    # which the run fails over to synchronous prepass.
+    watchdog_s: float | None = None
+    # Fault injector (repro.testing.faults.FaultInjector) — test/bench
+    # only, excluded from config equality: two configs with the same
+    # executor knobs are the same config.
+    faults: Any = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         validate_dispatch_config(self)
@@ -232,6 +285,10 @@ def _pipeline_prepass(
             # coords must never collide across (tile_h, tile_w).
             key = (coords_digest(coords_i, grid), grid.th, grid.tw, m,
                    cfg.schedule)
+            if cfg.faults is not None:
+                salt = cfg.faults.miss_salt()
+                if salt is not None:
+                    key = key + (salt,)
             sched, cache_hit = default_schedule_cache().get_or_build(
                 key, build_schedule)
         else:
@@ -365,6 +422,10 @@ def build_dense_schedule(coords_i, grid: TileGrid, m: int, cfg, interp: bool,
     # the cached artifact type differs from the TileSchedule entries.
     key = (coords_digest(coords_i, grid), grid.th, grid.tw, m,
            cfg.schedule, "dense")
+    if cfg.faults is not None:
+        salt = cfg.faults.miss_salt()
+        if salt is not None:
+            key = key + (salt,)
     return cache.get_or_build(key, build)
 
 
@@ -401,6 +462,8 @@ def _pipeline_batch_prepass(
                   batch=n) as ssp:
         scheds, hits = [], []
         for i in range(n):
+            if cfg.faults is not None:
+                cfg.faults.check("prepass", image=i)
             ds, hit = build_dense_schedule(coords[i], grid, m, cfg, interp,
                                            cache)
             scheds.append(ds)
@@ -443,6 +506,8 @@ def _pipeline_batch_exec(
     tp = grid.th * grid.tw
     t = grid.num_tiles
     c_out = w2.shape[-1]
+    if cfg.faults is not None:
+        cfg.faults.check("dispatch", images=n)
 
     x_tiles = jax.vmap(lambda p: plane_to_tiles(p, grid))(x)  # (N, T, tp, C)
     y_rows = dcn_fused_batch(
@@ -569,10 +634,14 @@ def dcn_pipeline(
         return (y, trace) if return_trace else y
 
     def prepass(i: int) -> _ImageArtifacts:
+        if cfg.faults is not None:
+            cfg.faults.check("prepass", image=i)
         return _pipeline_prepass(coords[i], grid, m, p_pad, cfg, interp,
                                  tracer=tr)
 
     def execute(i: int, art: _ImageArtifacts) -> jax.Array:
+        if cfg.faults is not None:
+            cfg.faults.check("dispatch", image=i)
         with use_tracer(tr):
             y_i, im_tr = _pipeline_exec(x[i], art, w2, params.b,
                                         kernel_size, cfg, grid, m, p_pad,
@@ -583,6 +652,7 @@ def dcn_pipeline(
         return y_i
 
     outs = run_staged(n, prepass, execute, cfg.staging_depth,
-                      trace.overlap, tracer=tr)
+                      trace.overlap, tracer=tr,
+                      watchdog_s=cfg.watchdog_s, faults=cfg.faults)
     y = jnp.stack(outs)
     return (y, trace) if return_trace else y

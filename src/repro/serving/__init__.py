@@ -1,2 +1,15 @@
 from repro.serving.engine import (DcnRequest, DcnServingEngine, DecodeEngine,
                                   Request)
+from repro.serving.errors import (DeadlineExceededError, DrainTimeout,
+                                  QueueFullError, RequestFailedError)
+
+__all__ = [
+    "DcnRequest",
+    "DcnServingEngine",
+    "DecodeEngine",
+    "Request",
+    "DeadlineExceededError",
+    "DrainTimeout",
+    "QueueFullError",
+    "RequestFailedError",
+]

@@ -24,6 +24,20 @@ into a fixed pool of slots and serves every occupied slot with ONE
 requests coalesce into one dispatch, and a large request's images can
 split across steps. ``stats`` exposes the cache hit rate,
 dispatch/overlap counters and submit->result latency percentiles.
+
+Resilience (ISSUE 8): requests are *isolated* — input validation at
+``submit()`` (shape, emptiness, finiteness), per-request deadlines
+checked at admission and completion, a bounded queue with
+``block``/``reject``/``shed-oldest`` backpressure, and per-step fault
+containment: a failed ``batch_fused`` step retries once with the
+offending slot evicted, then degrades to per-image ``batched`` dispatch
+so one poisoned image can never take down its step-mates. A failing
+request completes with ``DcnRequest.error`` set (``result()`` raises
+the typed ``RequestFailedError``) and is returned exactly once; all
+failure counters (``requests_failed``, ``deadline_expired``,
+``queue_rejected``, ``step_retries``, ``degraded_steps``,
+``watchdog_failovers``) surface through ``stats`` /
+``metrics_snapshot()``.
 """
 
 from __future__ import annotations
@@ -42,6 +56,8 @@ import numpy as np
 from repro.models import lm
 from repro.models.transformer import ModelConfig
 from repro.obs import MetricsRegistry, Tracer, get_tracer
+from repro.serving.errors import (DeadlineExceededError, DrainTimeout,
+                                  QueueFullError, RequestFailedError)
 
 
 @dataclasses.dataclass
@@ -73,6 +89,11 @@ class DecodeEngine:
         self.active = np.zeros((batch,), bool)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        # submit() is documented thread-safe (continuous batching admits
+        # from any producer thread); the lock covers every queue
+        # mutation — a bare list append/pop pair can interleave under
+        # concurrent submits.
+        self._lock = threading.Lock()
         self._key = jax.random.PRNGKey(rng_seed)
         ctx = {"mesh": mesh} if mesh is not None else {}
         self._step = jax.jit(
@@ -83,16 +104,18 @@ class DecodeEngine:
             raise ValueError(
                 f"request {req.rid}: empty prompt — decoding needs at "
                 "least one prompt token to seed the first step")
-        self.queue.append(req)
+        with self._lock:
+            self.queue.append(req)
 
     def _admit(self):
-        for i in range(self.batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                self.pos[i] = 0
-                self.pending_tok[i] = req.prompt[0]
-                self.active[i] = True
+        with self._lock:
+            for i in range(self.batch):
+                if self.slots[i] is None and self.queue:
+                    req = self.queue.pop(0)
+                    self.slots[i] = req
+                    self.pos[i] = 0
+                    self.pending_tok[i] = req.prompt[0]
+                    self.active[i] = True
 
     def _sample(self, logits, temperature):
         """Next-token sampling; ``temperature`` is a scalar or a per-slot
@@ -147,10 +170,21 @@ class DecodeEngine:
         return int(self.active.sum())
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Decode until idle. Raises :class:`DrainTimeout` (stuck rids +
+        what did finish) if ``max_steps`` is exhausted with requests
+        still queued or mid-decode — silently returning would drop
+        them."""
         for _ in range(max_steps):
             active = self.step()
-            if active == 0 and not self.queue:
-                break
+            with self._lock:
+                queued = bool(self.queue)
+            if active == 0 and not queued:
+                return self.finished
+        with self._lock:
+            stuck = ([r.rid for r in self.slots if r is not None]
+                     + [r.rid for r in self.queue])
+        if stuck:
+            raise DrainTimeout(stuck, finished=self.finished)
         return self.finished
 
 
@@ -167,6 +201,12 @@ class DcnRequest:
     the request finishes when its last image does. Latency is
     submit -> finish on the engine's clock (wall time by default, a
     virtual clock in open-loop benchmarks).
+
+    A request always *resolves*: either ``done`` with outputs, or
+    ``done`` with ``error`` set (executor fault, missed deadline, queue
+    shedding) — ``result()`` then raises that typed error instead of
+    returning garbage. ``deadline`` is absolute on the engine's clock
+    (set from ``submit(..., deadline_s=...)``).
     """
 
     rid: int
@@ -175,17 +215,27 @@ class DcnRequest:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     finish_s: float = 0.0
+    error: Exception | None = None
+    deadline: float | None = None
 
     @property
     def n_images(self) -> int:
         return int(self.x.shape[0])
 
     @property
+    def failed(self) -> bool:
+        return self.error is not None
+
+    @property
     def latency_s(self) -> float:
         return (self.finish_s - self.submit_s) if self.done else 0.0
 
     def result(self) -> np.ndarray:
-        """Stacked per-image outputs, in submit order."""
+        """Stacked per-image outputs, in submit order. Raises the
+        request's :class:`RequestFailedError` if it resolved with an
+        error."""
+        if self.error is not None:
+            raise self.error
         if not self.done:
             raise RuntimeError(f"request {self.rid} is not finished")
         return np.stack([np.asarray(o) for o in self.out])
@@ -221,22 +271,37 @@ class DcnServingEngine:
     def __init__(self, params, cfg, *, graph=None, cache_size: int = 256,
                  slots: int = 4,
                  clock: Callable[[], float] | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None,
+                 max_queue: int | None = None,
+                 queue_policy: str = "block",
+                 faults=None):
         # Local imports keep the LM serving path import-light.
         from repro.core.scheduler import host_schedule_builds
         from repro.models.dcn_models import DcnNetConfig
         from repro.runtime import (GraphConfig, LatencyStats, OverlapSpans,
                                    ScheduleCache, build_graph,
                                    clamp_tile_config)
+        from repro.runtime.pipeline import staging_watchdog_failovers
 
         if not isinstance(cfg, DcnNetConfig):
             raise ValueError(
                 f"DcnServingEngine needs a DcnNetConfig, got {type(cfg)}")
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
+        if queue_policy not in ("block", "reject", "shed-oldest"):
+            raise ValueError(
+                f"unknown queue_policy: {queue_policy!r} (expected "
+                f"'block', 'reject' or 'shed-oldest')")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.params = params
         self.cfg = cfg
         self.graph_cfg = graph or GraphConfig()
+        if faults is not None:
+            # Convenience: thread a fault injector through without the
+            # caller rebuilding the GraphConfig.
+            self.graph_cfg = dataclasses.replace(self.graph_cfg,
+                                                 faults=faults)
         self.net_graph = build_graph(cfg)
         self.cache = ScheduleCache(maxsize=cache_size)
         self.overlap = OverlapSpans()
@@ -257,8 +322,30 @@ class DcnServingEngine:
             help="host-issued kernel dispatches")
         self._m_steps = self.metrics.counter(
             "serving.steps", help="continuous-batching serving steps")
+        self._m_failed = self.metrics.counter(
+            "serving.requests_failed",
+            help="requests that resolved with an error status")
+        self._m_deadline = self.metrics.counter(
+            "serving.deadline_expired",
+            help="requests failed on a missed deadline (admission or "
+                 "completion)")
+        self._m_rejected = self.metrics.counter(
+            "serving.queue_rejected",
+            help="submits refused by the bounded queue (policy "
+                 "'reject', or a request wider than max_queue)")
+        self._m_shed = self.metrics.counter(
+            "serving.queue_shed",
+            help="queued requests evicted by policy 'shed-oldest'")
+        self._m_retries = self.metrics.counter(
+            "serving.step_retries",
+            help="batch_fused steps retried after an execution fault")
+        self._m_degraded = self.metrics.counter(
+            "serving.degraded_steps",
+            help="steps degraded to per-image batched dispatch")
         self._host_builds = host_schedule_builds
         self._host_builds0 = host_schedule_builds.count
+        self._watchdog = staging_watchdog_failovers
+        self._watchdog0 = staging_watchdog_failovers.count
         # Per-step serving timeline (filled only when the tracer is
         # enabled): step id, coalesced width, dispatch/DRAM accounting
         # and the step's dispatch span walls — what bench_serving dumps.
@@ -268,8 +355,13 @@ class DcnServingEngine:
         # whatever mix of slot images a step happens to coalesce) and is
         # clamped once: serving images all share the config's plane.
         self.n_slots = int(slots)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.queue_policy = queue_policy
         self._clock = clock if clock is not None else time.perf_counter
         self._lock = threading.Lock()
+        # Backpressure: blocked submitters wait on this; step()'s
+        # admission and any queue purge notify it.
+        self._queue_room = threading.Condition(self._lock)
         self._queue: deque[tuple[DcnRequest, int]] = deque()
         self._slots: list[tuple[DcnRequest, int] | None] = (
             [None] * self.n_slots)
@@ -277,9 +369,15 @@ class DcnServingEngine:
         self.latency = LatencyStats()
         self.metrics.register("serving.latency_s", self.latency)
         self.last_trace = None
+        self.last_step_faulted = False
         self._step_cfg = clamp_tile_config(
             dataclasses.replace(self.graph_cfg, dispatch="batch_fused"),
             cfg.img_size, cfg.img_size)
+        # Degraded mode: per-image batched dispatch, serial staging — a
+        # fault in one image's dispatch cannot touch another's.
+        self._degraded_cfg = dataclasses.replace(
+            self._step_cfg, dispatch="batched", staging_depth=1)
+        self._faults = self._step_cfg.faults
 
     # Counter-backed views keep the pre-registry attribute API
     # (``eng.requests`` etc.) readable while the registry is the single
@@ -307,12 +405,47 @@ class DcnServingEngine:
         constructed (0 on the device scheduling hot path)."""
         return self._host_builds.count - self._host_builds0
 
+    @property
+    def requests_failed(self) -> int:
+        return self._m_failed.count
+
+    @property
+    def watchdog_failovers(self) -> int:
+        """Staging-watchdog failovers since this engine was constructed
+        (the counter is process-wide, like ``host_schedule_builds``)."""
+        return self._watchdog.count - self._watchdog0
+
     def _absorb_trace(self, trace) -> None:
         """Fold one executor trace into the engine counters (caller must
         hold ``self._lock``)."""
         self._m_dispatches.inc(trace.kernel_dispatches)
         self.overlap.merge(trace.overlap)
         self.last_trace = trace
+
+    def _fail_locked(self, req: DcnRequest, error: RequestFailedError,
+                     now: float) -> bool:
+        """Resolve ``req`` with an error (caller holds ``self._lock``).
+
+        Purges its queued images and occupied slots so no later step
+        serves a dead request, and wakes blocked submitters (the queue
+        may have shrunk). Returns False if the request already resolved
+        (exactly-once: the caller must not report it again)."""
+        if req.done:
+            return False
+        req.error = error
+        req.done = True
+        req.finish_s = now
+        self._m_failed.inc()
+        if isinstance(error, DeadlineExceededError):
+            self._m_deadline.inc()
+        if any(e[0] is req for e in self._queue):
+            self._queue = deque(e for e in self._queue
+                                if e[0] is not req)
+        for i, s in enumerate(self._slots):
+            if s is not None and s[0] is req:
+                self._slots[i] = None
+        self._queue_room.notify_all()
+        return True
 
     def infer(self, x: jax.Array) -> jax.Array:
         """Serve one request batch (N, H, W, C) -> logits."""
@@ -334,11 +467,28 @@ class DcnServingEngine:
 
     # -- continuous batching ------------------------------------------------
 
-    def submit(self, x) -> DcnRequest:
+    def submit(self, x, *, deadline_s: float | None = None) -> DcnRequest:
         """Enqueue a request (thread-safe). ``x`` is one image (H, W, C)
         or a batch (n, H, W, C) matching the engine's configured plane.
         Returns the :class:`DcnRequest` handle; results appear on it
-        once serving steps complete its images."""
+        once serving steps complete its images.
+
+        ``deadline_s`` (relative, engine clock) fails the request with
+        :class:`DeadlineExceededError` if it is still queued past the
+        deadline (checked at admission) or its step completes past it
+        (checked at completion).
+
+        With ``max_queue`` set, a submit that would overfill the queue
+        follows ``queue_policy``: ``block`` waits for admission to make
+        room, ``reject`` raises :class:`QueueFullError` (no handle is
+        created), ``shed-oldest`` evicts the request(s) owning the
+        oldest queued images — their handles resolve immediately with a
+        ``RequestFailedError`` caused by ``QueueFullError`` (shed
+        requests never appear in ``step()``/``drain()`` returns; they
+        resolve on the handle). A single
+        request wider than ``max_queue`` is always rejected (no policy
+        could ever fit it).
+        """
         x = np.asarray(x)
         if x.ndim == 3:
             x = x[None]
@@ -351,12 +501,52 @@ class DcnServingEngine:
             raise ValueError(
                 "empty request: a serving request needs at least one "
                 "image")
-        with self._lock:
+        if not bool(np.isfinite(x).all()):
+            # NaN/Inf offsets would decode into garbage clipped-floor
+            # coords and poison the schedule cache with a junk digest
+            # entry shared across requests — reject at the front door.
+            raise ValueError(
+                "request images must be finite: NaN/Inf values poison "
+                "the quantized-coords schedule-cache digest")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be > 0, got {deadline_s}")
+        n_img = int(x.shape[0])
+        with self._queue_room:
+            if self.max_queue is not None and n_img > self.max_queue:
+                self._m_rejected.inc()
+                raise QueueFullError(
+                    f"request of {n_img} images exceeds max_queue="
+                    f"{self.max_queue}")
+            if self.max_queue is not None:
+                if self.queue_policy == "reject":
+                    if len(self._queue) + n_img > self.max_queue:
+                        self._m_rejected.inc()
+                        raise QueueFullError(
+                            f"queue full ({len(self._queue)}/"
+                            f"{self.max_queue} images queued)")
+                elif self.queue_policy == "shed-oldest":
+                    while len(self._queue) + n_img > self.max_queue:
+                        victim = self._queue[0][0]
+                        self._m_shed.inc()
+                        self._fail_locked(
+                            victim,
+                            RequestFailedError(
+                                victim.rid,
+                                cause=QueueFullError(
+                                    f"request {victim.rid} shed: queue "
+                                    "full, policy shed-oldest")),
+                            self._clock())
+                else:  # block
+                    while len(self._queue) + n_img > self.max_queue:
+                        self._queue_room.wait()
             req = DcnRequest(rid=next(self._rid), x=x,
                              submit_s=self._clock(),
-                             out=[None] * int(x.shape[0]))
+                             out=[None] * n_img)
+            if deadline_s is not None:
+                req.deadline = req.submit_s + deadline_s
             self._m_requests.inc()
-            for j in range(req.n_images):
+            for j in range(n_img):
                 self._queue.append((req, j))
         self.tracer.instant("serve.submit", rid=req.rid,
                             images=req.n_images)
@@ -368,48 +558,137 @@ class DcnServingEngine:
         with self._lock:
             return len(self._queue)
 
+    def _run_batch(self, images: list[np.ndarray], step_cfg):
+        """One executor call over a list of images -> (outputs, trace)."""
+        from repro.models.dcn_models import _apply_head
+        from repro.runtime import run_graph
+
+        xb = jnp.asarray(np.stack(images))
+        y, trace = run_graph(
+            self.params["convs"], self.net_graph, xb, config=step_cfg,
+            max_displacement=self.cfg.max_displacement,
+            return_trace=True, schedule_cache=self.cache,
+            tracer=self.tracer)
+        out = np.asarray(_apply_head(self.params, self.cfg, y,
+                                     self.cfg.name == "segnet"))
+        return out, trace
+
+    def _execute_isolated(self, images: list[np.ndarray]):
+        """Serve one step's images with request isolation.
+
+        Returns ``(outs, traces, failures, degraded)``: ``outs`` maps
+        batch position -> output array, ``failures`` maps batch
+        position -> exception, ``traces`` is the executor traces to
+        absorb, ``degraded`` marks a step that fell back to per-image
+        batched dispatch.
+
+        Fault containment ladder: (1) the coalesced ``batch_fused`` run;
+        (2) on an exception that names the offending image
+        (``e.image``), retry ONCE with that slot evicted; (3) on an
+        unattributed exception or a failed retry, degrade to per-image
+        ``batched`` dispatch, capturing each image's exception
+        individually — one poisoned image can then never fail its
+        step-mates.
+        """
+        n = len(images)
+        try:
+            out, trace = self._run_batch(images, self._step_cfg)
+            return dict(enumerate(out)), [trace], {}, False
+        except Exception as e:   # isolation boundary: any executor fault
+            first = e
+        self._m_retries.inc()
+        self.tracer.instant("serve.step_retry",
+                            error=type(first).__name__)
+        failures: dict[int, Exception] = {}
+        bad = getattr(first, "image", None)
+        if isinstance(bad, int) and 0 <= bad < n:
+            failures[bad] = first
+            keep = [k for k in range(n) if k != bad]
+            if not keep:
+                return {}, [], failures, False
+            try:
+                out, trace = self._run_batch([images[k] for k in keep],
+                                             self._step_cfg)
+                return ({k: out[z] for z, k in enumerate(keep)},
+                        [trace], failures, False)
+            except Exception:    # retry faulted too -> degrade
+                pass
+        self._m_degraded.inc()
+        self.tracer.instant("serve.step_degraded", width=n)
+        outs: dict[int, np.ndarray] = {}
+        traces: list = []
+        for k in range(n):
+            if k in failures:
+                continue
+            try:
+                out, trace = self._run_batch([images[k]],
+                                             self._degraded_cfg)
+                outs[k] = out[0]
+                traces.append(trace)
+            except Exception as ek:
+                failures[k] = ek
+        return outs, traces, failures, True
+
     def step(self) -> list[DcnRequest]:
         """One continuous-batching serving step.
 
         Admission: free slots refill from the queue in submit order —
         a large request's images may split across steps, and images from
-        different requests coalesce into the same step. Execution: one
-        ``batch_fused`` ragged grid per layer segment over ALL occupied
-        slots (the per-image schedules — and therefore the DRAM trace —
-        are exactly the per-image simulator's; the batch only shares
-        dispatches). Returns the requests that finished this step.
+        different requests coalesce into the same step. Requests whose
+        deadline already passed fail at admission without occupying a
+        slot. Execution: one ``batch_fused`` ragged grid per layer
+        segment over ALL occupied slots (the per-image schedules — and
+        therefore the DRAM trace — are exactly the per-image
+        simulator's; the batch only shares dispatches), with the
+        retry/degrade fault containment of :meth:`_execute_isolated`.
+        Returns the requests that resolved this step — finished OR
+        failed, each exactly once.
         """
-        from repro.models.dcn_models import _apply_head
-        from repro.runtime import run_graph
-
         tr = self.tracer
+        faults = self._faults
+        if faults is not None:
+            begin = getattr(faults, "begin_step", None)
+            if begin is not None:
+                begin()
+        finished: list[DcnRequest] = []
         with tr.span("serve.admit", queue_depth=self.queue_depth):
             with self._lock:
+                now = self._clock()
                 for i in range(self.n_slots):
-                    if self._slots[i] is None and self._queue:
-                        self._slots[i] = self._queue.popleft()
+                    if self._slots[i] is not None:
+                        continue
+                    while self._queue:
+                        req, j = self._queue.popleft()
+                        self._queue_room.notify_all()
+                        if req.done:
+                            continue   # failed/shed while queued
+                        if req.deadline is not None and now > req.deadline:
+                            if self._fail_locked(
+                                    req,
+                                    DeadlineExceededError(
+                                        req.rid, deadline=req.deadline),
+                                    now):
+                                finished.append(req)
+                            continue
+                        self._slots[i] = (req, j)
+                        break
                 occupied = [(i, s[0], s[1])
                             for i, s in enumerate(self._slots)
                             if s is not None]
         if not occupied:
-            return []
+            return finished
         step_id = self._m_steps.count
         hits0 = self.cache.info()["image_hits"] if tr.enabled else 0
         mark = len(tr) if tr.enabled else 0
+        images = [req.x[j] for _, req, j in occupied]
         with tr.timed("serve.step", step=step_id,
                       width=len(occupied)) as ssp:
-            xb = jnp.asarray(np.stack([req.x[j]
-                                       for _, req, j in occupied]))
-            y, trace = run_graph(
-                self.params["convs"], self.net_graph, xb,
-                config=self._step_cfg,
-                max_displacement=self.cfg.max_displacement,
-                return_trace=True, schedule_cache=self.cache,
-                tracer=tr)
-            out = np.asarray(_apply_head(self.params, self.cfg, y,
-                                         self.cfg.name == "segnet"))
-            ssp.set(dispatches=trace.kernel_dispatches,
-                    dram_bytes=trace.total_dram_bytes)
+            outs, traces, failures, degraded = \
+                self._execute_isolated(images)
+            dispatches = sum(t.kernel_dispatches for t in traces)
+            dram = sum(t.total_dram_bytes for t in traces)
+            ssp.set(dispatches=dispatches, dram_bytes=dram,
+                    failures=len(failures), degraded=degraded)
         if tr.enabled:
             dispatch_spans = [s for s in tr.spans_since(mark)
                               if s.name.startswith("dispatch.")]
@@ -417,8 +696,10 @@ class DcnServingEngine:
                 "step": step_id,
                 "width": len(occupied),
                 "wall_s": ssp.dur,
-                "dispatches": trace.kernel_dispatches,
-                "dram_bytes": trace.total_dram_bytes,
+                "dispatches": dispatches,
+                "dram_bytes": dram,
+                "failures": len(failures),
+                "degraded": degraded,
                 "image_hits": (self.cache.info()["image_hits"]
                                - hits0),
                 "schedule_backend": self._step_cfg.schedule_backend,
@@ -426,15 +707,37 @@ class DcnServingEngine:
                     {"name": s.name, "dur_s": s.dur, **s.attrs}
                     for s in dispatch_spans],
             })
-        finished: list[DcnRequest] = []
         now = self._clock()
         with self._lock:
             self._m_steps.inc()
             self._m_images.inc(len(occupied))
-            self._absorb_trace(trace)
+            for t in traces:
+                self._absorb_trace(t)
+            self.last_step_faulted = bool(failures)
             for k, (i, req, j) in enumerate(occupied):
-                req.out[j] = out[k]
                 self._slots[i] = None
+                if req.done:
+                    continue   # a step-mate image already failed it
+                if k in failures:
+                    e = failures[k]
+                    err = (e if isinstance(e, RequestFailedError)
+                           else RequestFailedError(req.rid, cause=e))
+                    if self._fail_locked(req, err, now):
+                        finished.append(req)
+                    continue
+                if k in outs:
+                    req.out[j] = outs[k]
+                if req.deadline is not None and now > req.deadline:
+                    # Mid-flight expiry: computed, but past the caller's
+                    # deadline — the contract is the deadline, not the
+                    # compute.
+                    if self._fail_locked(
+                            req,
+                            DeadlineExceededError(req.rid,
+                                                  deadline=req.deadline),
+                            now):
+                        finished.append(req)
+                    continue
                 if all(o is not None for o in req.out):
                     req.done = True
                     req.finish_s = now
@@ -444,7 +747,11 @@ class DcnServingEngine:
 
     def drain(self, max_steps: int = 10_000) -> list[DcnRequest]:
         """Serve until queue and slots are empty. Returns every request
-        that finished during the drain, each exactly once."""
+        that resolved during the drain (finished or failed), each
+        exactly once. Raises :class:`DrainTimeout` — carrying the stuck
+        rids and everything that did resolve — if ``max_steps`` is
+        exhausted with work still in flight, instead of silently
+        dropping it."""
         finished: list[DcnRequest] = []
         with self.tracer.span("serve.drain") as sp:
             for _ in range(max_steps):
@@ -453,8 +760,15 @@ class DcnServingEngine:
                     idle = (not self._queue
                             and all(s is None for s in self._slots))
                 if idle:
-                    break
-            sp.set(finished=len(finished))
+                    sp.set(finished=len(finished))
+                    return finished
+            with self._lock:
+                stuck = sorted(
+                    {req.rid for req, _ in self._queue}
+                    | {s[0].rid for s in self._slots if s is not None})
+            sp.set(finished=len(finished), stuck=len(stuck))
+        if stuck:
+            raise DrainTimeout(stuck, finished=finished)
         return finished
 
     @property
@@ -503,6 +817,15 @@ class DcnServingEngine:
                 "steps": self.steps,
                 "host_schedule_builds": self.host_schedule_builds,
                 "latency": self.latency.summary(),
+                "max_queue": self.max_queue,
+                "queue_policy": self.queue_policy,
+                "requests_failed": self._m_failed.count,
+                "deadline_expired": self._m_deadline.count,
+                "queue_rejected": self._m_rejected.count,
+                "queue_shed": self._m_shed.count,
+                "step_retries": self._m_retries.count,
+                "degraded_steps": self._m_degraded.count,
+                "watchdog_failovers": self.watchdog_failovers,
             }
 
     def metrics_snapshot(self) -> dict[str, Any]:
@@ -519,6 +842,8 @@ class DcnServingEngine:
             m.gauge("serving.slots").set(self.n_slots)
             m.gauge("serving.host_schedule_builds").set(
                 self.host_schedule_builds)
+            m.gauge("serving.watchdog_failovers").set(
+                self.watchdog_failovers)
             req = self._m_requests.count
             m.gauge("serving.dispatches_per_batch").set(
                 self._m_dispatches.count / req if req else 0.0)

@@ -1,0 +1,4 @@
+from repro.testing.faults import (ALL_FAULT_KINDS, FaultError, FaultInjector,
+                                  FaultPlan)
+
+__all__ = ["ALL_FAULT_KINDS", "FaultError", "FaultInjector", "FaultPlan"]
