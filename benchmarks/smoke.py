@@ -37,6 +37,14 @@ the CI bench-smoke job) if:
     healthy-request p99 exceed 1.5x the fault-free baseline, breaks
     the executor-trace == DRAM-simulator cross-check on a non-faulted
     step, or fails the isolation / backpressure scenario checks;
+  * the multi-device scale-out sweep (ISSUE 9 gate) does not reach a
+    near-linear >= 2.5x modeled requests/sec at 4 forced host devices
+    over the single-device baseline — the speedup is the accelerator
+    model applied to the MEASURED per-replica counters (DRAM bytes,
+    SPMD dispatches, all-gather bytes) of the real sharded serving
+    engine, so an unbalanced replica placement or a chatty collective
+    fails the gate even though forced host devices share the CI
+    worker's cores (wall-clock rps is reported, never gated);
   * ``--compare BASELINE_DIR`` is given (previous main-branch
     ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or a
     dispatch count (batched per-image, batch-fused at batch>1, or
@@ -46,10 +54,12 @@ the CI bench-smoke job) if:
     rps and hit rate are higher-is-better), or the chaos bench loses
     a request (fails on >0) or its healthy p99 ratio climbs high.
 
-``--suite {all,core,resilience}`` selects which benches run: ``core``
-is the perf suite above, ``resilience`` only the chaos bench (its own
-CI leg), ``all`` (default) both. Gates and ``--compare`` checks apply
-only to suites that ran.
+``--suite {all,core,resilience,scaleout}`` selects which benches run:
+``core`` is the perf suite above, ``resilience`` only the chaos bench
+(its own CI leg), ``scaleout`` only the multi-device sweep (the
+``multidevice`` CI leg; the sweep spawns its own forced-device
+subprocesses, so any host can run it), ``all`` (default) everything.
+Gates and ``--compare`` checks apply only to suites that ran.
 """
 
 from __future__ import annotations
@@ -64,8 +74,9 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:          # allow `python benchmarks/smoke.py`
     sys.path.insert(0, _ROOT)
 
-from benchmarks import (bench_fusion, bench_graph, bench_resilience,
-                        bench_scheduling, bench_serving)
+from benchmarks import (bench_fusion, bench_graph, bench_platforms,
+                        bench_resilience, bench_scheduling,
+                        bench_serving)
 
 TINY_TDT = dict(h=16, w=16, c=16, tiles_per_side=4)
 
@@ -129,6 +140,10 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
          lambda p: int(p["resilience_requests_lost"]), "lower"),
         ("BENCH_resilience.json", "resilience healthy p99 ratio",
          lambda p: float(p["resilience_p99_ratio"]), "lower", 1.5),
+        ("BENCH_platforms.json", "scale-out modeled speedup",
+         lambda p: float(p["scaleout_modeled_speedup"]), "higher"),
+        ("BENCH_platforms.json", "scale-out all-gather bytes",
+         lambda p: int(p["scaleout_allgather_bytes"]), "lower"),
     ]
     for fname, what, extract, direction, *floor in checks:
         if fname not in suites:
@@ -422,6 +437,51 @@ def _gate_resilience(suites: dict) -> int:
     return rc
 
 
+def _gate_scaleout(suites: dict) -> int:
+    """ISSUE 9 gate: the sharded serving engine must scale near-
+    linearly — >= 2.5x modeled requests/sec at 4 forced host devices
+    over single-device, with the speedup computed from the MEASURED
+    per-replica counters (slowest-replica DRAM + dispatch time plus the
+    logits all-gather), so unbalanced replica placement or collective
+    bloat fails here even on a one-core worker."""
+    if "BENCH_platforms.json" not in suites:
+        return 0
+    rc = 0
+    payload = suites["BENCH_platforms.json"]
+    summary = _record(payload, "scaleout_summary")
+    if summary is None:
+        print("ERROR: scaleout_summary record missing from "
+              "bench_platforms")
+        return 1
+    modeled = float(summary["modeled_speedup"])
+    devices_max = int(summary["devices_max"])
+    payload["scaleout_devices_max"] = devices_max
+    payload["scaleout_modeled_speedup"] = modeled
+    payload["scaleout_measured_speedup"] = float(
+        summary["measured_speedup"])
+    points = [r for r in payload["records"] if r["label"] == "scaleout"]
+    peak = next((r for r in points
+                 if int(r["devices"]) == devices_max), None)
+    payload["scaleout_allgather_bytes"] = (
+        int(peak["allgather_bytes"]) if peak else 0)
+    imgs = [int(r["images"]) for r in payload["records"]
+            if (r["label"] == "scaleout_device"
+                and int(r["devices"]) == devices_max)]
+    if devices_max >= 4 and modeled < 2.5:
+        print(f"ERROR: scale-out modeled speedup {modeled:.2f}x < 2.5x "
+              f"at {devices_max} devices")
+        rc = 1
+    if imgs and max(imgs) - min(imgs) > 1:
+        print(f"ERROR: replica placement unbalanced at "
+              f"{devices_max} devices: per-replica images {imgs}")
+        rc = 1
+    if summary["near_linear"] != ("yes" if modeled >= 2.5 else "no"):
+        print("ERROR: scaleout_summary near_linear flag disagrees with "
+              "its own modeled_speedup")
+        rc = 1
+    return rc
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=".", help="output directory")
@@ -430,7 +490,7 @@ def main(argv=None) -> int:
                          "artifacts; fail on >10%% regression of "
                          "scheduled loads / dispatch count")
     ap.add_argument("--suite", default="all",
-                    choices=("all", "core", "resilience"),
+                    choices=("all", "core", "resilience", "scaleout"),
                     help="which bench suites to run (default: all)")
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
@@ -490,6 +550,13 @@ def main(argv=None) -> int:
                                         slots=4, n_requests=24,
                                         fault_rate=0.1, seed=0)),
         ])
+    if args.suite in ("all", "scaleout"):
+        suites["BENCH_platforms.json"] = _collect("platforms", [
+            (bench_platforms.run, {}),
+            (bench_platforms.run_scaleout, dict(
+                device_counts=(1, 2, 4), n_requests=12, img=16,
+                n_deform=2, width_mult=0.125, tile=4, slots=4)),
+        ])
 
     # Gates apply only to suites that ran (--suite). The CI bench-smoke
     # job fails on the nonzero exit.
@@ -498,6 +565,7 @@ def main(argv=None) -> int:
     rc = max(rc, _gate_scheduling(suites))
     rc = max(rc, _gate_serving(suites))
     rc = max(rc, _gate_resilience(suites))
+    rc = max(rc, _gate_scaleout(suites))
 
     if args.compare:
         rc = max(rc, _compare_baseline(args.compare, suites))

@@ -29,7 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec
 
+from repro.compat import shard_map
 from repro.obs import get_tracer
 
 
@@ -387,6 +389,63 @@ def _dcn_fused_batch_jit(
 
 
 # ---------------------------------------------------------------------------
+# Sharded batch-fused dispatch: the batch grid above, SPMD over a device
+# mesh's "data" axis. Each device runs the concatenated Algorithm-1
+# schedules of its LOCAL images only — the paper's replicated-lane
+# scaling unit — with zero collective contact inside the kernel (the
+# executor all-gathers once, at the logits).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "axis", "t_in", "kernel_size",
+                                    "block_p", "interpret"))
+def _dcn_fused_batch_sharded_jit(
+    x_tiles: jax.Array,   # (D, N_loc*T_in, tp, C_in) per-shard tiles
+    row_id: jax.Array,    # (D, G_loc) int32 shard-LOCAL idx/coeff rows
+    dep_glb: jax.Array,   # (D, G_loc, k_pad) int32 shard-LOCAL dep ids
+    dep_cnt: jax.Array,   # (D, G_loc) int32 true dep count (0 = padded)
+    idx: jax.Array,       # (D, N_loc*T_out, P, KK, 4) int32
+    coeff: jax.Array,     # (D, N_loc*T_out, P, KK, 4) float
+    w: jax.Array,         # (KK, C_in, C_out) replicated weights
+    b: jax.Array,         # (C_out,) replicated bias
+    *,
+    mesh,
+    axis: str,
+    t_in: int,
+    kernel_size: int,
+    block_p: int,
+    interpret: bool,
+) -> jax.Array:
+    """Per-device :func:`_dcn_fused_batch_jit` over mesh axis ``axis`` ->
+    (D, G_loc, P, C_out), shard ``s`` computed entirely on device ``s``.
+
+    Every operand except the weights carries a leading shard axis of
+    size ``D == mesh.shape[axis]``; ``shard_map`` hands each device its
+    own slab (leading dim 1), which runs the ordinary batch-fused grid
+    over its local images. G_loc / k_pad are the max over shards, but
+    the dep tables are packed PER SHARD: a shard with shorter schedules
+    keeps its own ragged padding (``dep_cnt == 0`` rows skip compute and
+    their DMAs are elided by the clamped index map), so one slow replica
+    never inflates another's real work.
+    """
+    spec = PartitionSpec(axis)
+
+    def body(xt, row, dep, cnt, ix, cf, wl, bl):
+        y = _dcn_fused_batch_jit(xt[0], row[0], dep[0], cnt[0], ix[0],
+                                 cf[0], wl, bl, t_in=t_in,
+                                 kernel_size=kernel_size,
+                                 block_p=block_p, interpret=interpret)
+        return y[None]
+
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(spec,) * 6 + (PartitionSpec(),
+                                          PartitionSpec()),
+                  out_specs=spec)
+    return f(x_tiles, row_id, dep_glb, dep_cnt, idx, coeff, w, b)
+
+
+# ---------------------------------------------------------------------------
 # Public dispatch wrappers: the jitted kernels above, plus a telemetry
 # span per host dispatch. Spans cannot live INSIDE the jitted functions
 # (they would fire once at trace time, not per call), so each entry
@@ -457,3 +516,33 @@ def dcn_fused_batch(x_tiles, row_id, dep_glb, dep_cnt, idx, coeff, w, b,
                                     idx, coeff, w, b, t_in=t_in,
                                     kernel_size=kernel_size,
                                     block_p=block_p, interpret=interpret)
+
+
+def dcn_fused_batch_sharded(x_tiles, row_id, dep_glb, dep_cnt, idx, coeff,
+                            w, b, *, mesh, axis: str = "data", t_in: int,
+                            kernel_size: int = 3, block_p: int = 128,
+                            interpret: bool = False):
+    """Fused Eq.2+3 over per-device shards of a batch's schedules ->
+    (D, G_loc, P, C_out); shard ``s`` runs on mesh device ``s``."""
+    d = mesh.shape[axis]
+    for name, arr in (("x_tiles", x_tiles), ("row_id", row_id),
+                      ("dep_glb", dep_glb), ("dep_cnt", dep_cnt),
+                      ("idx", idx), ("coeff", coeff)):
+        if arr.shape[0] != d:
+            raise ValueError(
+                f"{name} leading dim {arr.shape[0]} != mesh "
+                f"{axis!r} axis size {d}")
+    sp = _span_dispatch("dispatch.batch_fused_sharded", x_tiles,
+                        shards=int(d),
+                        grid_rows=int(row_id.shape[0] * row_id.shape[1]),
+                        c_out=int(w.shape[-1]))
+    if sp is None:
+        return _dcn_fused_batch_sharded_jit(
+            x_tiles, row_id, dep_glb, dep_cnt, idx, coeff, w, b,
+            mesh=mesh, axis=axis, t_in=t_in, kernel_size=kernel_size,
+            block_p=block_p, interpret=interpret)
+    with sp:
+        return _dcn_fused_batch_sharded_jit(
+            x_tiles, row_id, dep_glb, dep_cnt, idx, coeff, w, b,
+            mesh=mesh, axis=axis, t_in=t_in, kernel_size=kernel_size,
+            block_p=block_p, interpret=interpret)

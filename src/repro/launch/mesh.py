@@ -25,7 +25,26 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (fake) host devices exist — used by
-    smoke/distributed tests (8 fake devices) and single-device runs."""
+    smoke/distributed tests (8 fake devices), the scale-out executor
+    path (``data_parallel=``) and single-device runs.
+
+    Validates the request against the live device count up front: the
+    raw ``make_mesh`` reshape error ("cannot reshape array of size 1
+    into shape (2, 1)") says nothing about WHY there aren't enough
+    devices or how to get more on a CPU host.
+    """
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data}, "
+                         f"model={model}")
+    have = jax.device_count()
+    if data * model > have:
+        raise ValueError(
+            f"make_host_mesh(data={data}, model={model}) needs "
+            f"{data * model} devices but only {have} "
+            f"{'is' if have == 1 else 'are'} available — launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{data * model} (set before jax initialises) or shrink "
+            f"the mesh")
     return make_mesh((data, model), ("data", "model"))
 
 

@@ -58,6 +58,11 @@ from repro.runtime.pipeline import (
     dcn_pipeline,
     resolve_interpret,
 )
+from repro.runtime.shard import (
+    ShardPlan,
+    plan_batch_shards,
+    resolve_shard_mesh,
+)
 from repro.runtime.trace import (
     GroupTrace,
     ImageTrace,
@@ -83,6 +88,9 @@ __all__ = [
     "resolve_interpret",
     "ScheduleCache",
     "default_schedule_cache",
+    "ShardPlan",
+    "plan_batch_shards",
+    "resolve_shard_mesh",
     "GraphConfig",
     "TileBuffer",
     "clamp_tile_config",

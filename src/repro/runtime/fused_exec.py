@@ -60,8 +60,9 @@ from repro.core.scheduler import (DeviceSchedule, TileSchedule, pow2_pad,
 from repro.core.tiles import (TileGrid, compose_tdt_chain,
                               compose_tdt_chain_device, tdt_from_coords,
                               tdt_standard_conv)
-from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
-                                     dcn_fused_tile)
+from repro.kernels.dcn_fused import (dcn_fused_batch,
+                                     dcn_fused_batch_sharded,
+                                     dcn_fused_schedule, dcn_fused_tile)
 from repro.kernels.dcn_schedule import (tdt_dispatch_arrays,
                                         tdt_from_coords_device)
 from repro.kernels.ops import round_up
@@ -78,6 +79,10 @@ from repro.runtime.packing import (build_neighbour_tables,
                                    plane_to_tiles, tiles_to_plane)
 from repro.runtime.pipeline import (resolve_interpret, run_staged,
                                     validate_dispatch_config)
+from repro.runtime.shard import (ShardPlan, allgather_nbytes,
+                                 plan_batch_shards, resolve_shard_mesh,
+                                 shard_batch_schedules, stack_rows,
+                                 unstack_rows)
 from repro.runtime.trace import (GroupTrace, LayerBufferStats, NetworkTrace,
                                  TileRecord)
 
@@ -119,6 +124,13 @@ class GraphConfig:
     # A staged prepass that misses it triggers failover to synchronous
     # prepass for the rest of the run (see pipeline.run_staged).
     watchdog_s: float | None = None
+    # Batch-dimension scale-out (batch_fused only): an explicit
+    # jax.sharding.Mesh with a "data" axis, or data_parallel=D (builds a
+    # (D, 1) host mesh at run time). Each mesh device runs the
+    # concatenated schedules of its local images; the only collective is
+    # the all-gather at the logits.
+    mesh: Any = None
+    data_parallel: int | None = None
     # Fault injector (repro.testing.faults.FaultInjector) — test/bench
     # only, excluded from config equality.
     faults: Any = dataclasses.field(default=None, compare=False)
@@ -684,11 +696,19 @@ class _ImageGroupSched:
 
 @dataclasses.dataclass
 class _BatchLayerOps:
-    """One DCN layer's batch-fused operands (whole batch)."""
+    """One DCN layer's batch-fused operands (whole batch).
 
-    batch: object                         # packing.BatchDispatch
-    idx: jax.Array                        # (N*T, p_pad, KK, 4)
+    Single-device: ``batch`` is a ``packing.BatchDispatch`` and
+    idx/coeff are flat ``(N*T, p_pad, KK, 4)``. Sharded: ``shard`` is a
+    ``shard.ShardedDispatch`` and idx/coeff carry a leading shard axis
+    ``(D, n_max*T, p_pad, KK, 4)`` (shard-contiguous, zero-padded to the
+    fullest shard).
+    """
+
+    batch: object                         # BatchDispatch | None
+    idx: jax.Array
     coeff: jax.Array
+    shard: object = None                  # ShardedDispatch | None
 
 
 @dataclasses.dataclass
@@ -716,13 +736,17 @@ def _group_batch_prepass(
     need_out_plane: bool,
     interp: bool,
     tracer: Tracer | None = None,
+    plan: ShardPlan | None = None,
 ) -> tuple[_BatchGroupArtifacts, jax.Array]:
     """Batch-level prepass for one group: the stage-1 chain runs batched
     (one XLA dispatch per layer for all images), per-image composite
     schedules are built in dense form (cached — partial batch hits skip
     scheduling for the hit images), and the per-layer batch operands are
     concatenated with per-image base offsets. With the device scheduling
-    backend everything after the digest stays on-device."""
+    backend everything after the digest stays on-device. With a shard
+    ``plan`` the per-layer operands concatenate PER SHARD (each shard
+    keeps its own ragged padding) — per-image schedules themselves are
+    built identically either way, so traces never depend on placement."""
     tr = tracer if tracer is not None else get_tracer()
     n = planes.shape[0]
     device = cfg.schedule_backend == "device" and cfg.schedule == "alg1"
@@ -839,17 +863,24 @@ def _group_batch_prepass(
             if not isinstance(node, DeformNode):
                 layer_ops.append(None)
                 continue
-            batch = pack_batch_schedules(
-                [bundles[i].exec_scheds[j] for i in range(n)], t_out,
-                t_out)
             kk = node.kernel_size ** 2
             idx, coeff = jax.vmap(
                 lambda c: pack_plane_operands(c, grid, p_pad)
             )(coords_layers[j])
-            layer_ops.append(_BatchLayerOps(
-                batch,
-                idx.reshape(n * t_out, p_pad, kk, 4),
-                coeff.reshape(n * t_out, p_pad, kk, 4)))
+            idx = idx.reshape(n * t_out, p_pad, kk, 4)
+            coeff = coeff.reshape(n * t_out, p_pad, kk, 4)
+            scheds = [bundles[i].exec_scheds[j] for i in range(n)]
+            if plan is not None:
+                layer_ops.append(_BatchLayerOps(
+                    None,
+                    stack_rows(idx, plan, t_out),
+                    stack_rows(coeff, plan, t_out),
+                    shard=shard_batch_schedules(scheds, t_out, t_out,
+                                                plan)))
+            else:
+                layer_ops.append(_BatchLayerOps(
+                    pack_batch_schedules(scheds, t_out, t_out),
+                    idx, coeff))
 
     art = _BatchGroupArtifacts(
         grid=grid, m=m, bundles=bundles, cache_hits=hits,
@@ -865,13 +896,21 @@ def _exec_group_batch_fused(
     cfg: GraphConfig,
     interpret: bool,
     art: _BatchGroupArtifacts,
+    mesh=None,
+    plan: ShardPlan | None = None,
 ) -> tuple[jax.Array, int]:
     """Execute one fused group for the whole batch: ONE dispatch per
     layer segment (the batch-fused kernel for DCN layers, one batched
-    XLA conv for standard layers)."""
+    XLA conv for standard layers). With ``mesh``/``plan`` each DCN
+    segment stacks its tile rows into per-shard slabs, dispatches the
+    shard_map kernel, and unstacks the scattered result — everything
+    else (conv segments, plane assembly) runs on the TRUE batch with
+    exactly the single-device shapes, so sharded results are bit-equal
+    to the unsharded run (XLA convs can change reduction order with
+    batch size; never giving them a padded pseudo-batch avoids that)."""
     n = planes.shape[0]
     if cfg.faults is not None:
-        cfg.faults.check("dispatch", images=n)
+        cfg.faults.check("dispatch", images=plan.n if plan else n)
     grid = art.grid
     h, w = grid.h, grid.w
     tp = grid.th * grid.tw
@@ -890,23 +929,46 @@ def _exec_group_batch_fused(
             ops = art.layer_ops[j]
             kk = node.kernel_size ** 2
             w2 = p.w.reshape(kk, node.c_in, node.c_out)
-            y = dcn_fused_batch(
-                flat, ops.batch.row_id, ops.batch.dep_glb,
-                ops.batch.dep_cnt, ops.idx, ops.coeff, w2, p.b,
-                t_in=t, kernel_size=node.kernel_size, block_p=cfg.block_p,
-                interpret=interpret)[:, :tp]
-            if node.relu:
-                y = jax.nn.relu(y)
-            y = y * masks_arr[jnp.maximum(ops.batch.oid, 0)]
-            if j == last:
-                # Scatter scheduled rows back to (image, tile) order;
-                # ragged-padding rows fall into a dropped dump row.
-                target = jnp.where(ops.batch.oid >= 0, ops.batch.row_id,
-                                   n * t)
-                y_all = jnp.zeros((n * t + 1, tp, node.c_out), y.dtype)
-                flat = y_all.at[target].set(y)[:-1]
+            if plan is not None:
+                sh = ops.shard
+                d = plan.n_shards
+                slab = plan.n_max * t
+                y = dcn_fused_batch_sharded(
+                    stack_rows(flat, plan, t), sh.row_id, sh.dep_glb,
+                    sh.dep_cnt, ops.idx, ops.coeff, w2, p.b, mesh=mesh,
+                    t_in=t, kernel_size=node.kernel_size,
+                    block_p=cfg.block_p, interpret=interpret)[:, :, :tp]
+                if node.relu:
+                    y = jax.nn.relu(y)
+                y = y * masks_arr[jnp.maximum(sh.oid, 0)]
+                # Scatter each shard's scheduled rows back to shard-
+                # local (image, tile) order — padding rows (ragged
+                # schedules or shard-size fill) land in a dropped per-
+                # shard dump row — then unstack to true batch rows.
+                target = jnp.where(sh.oid >= 0, sh.row_id, slab)
+                y_all = jnp.zeros((d, slab + 1, tp, node.c_out), y.dtype)
+                y_all = jax.vmap(lambda ya, tg, yy: ya.at[tg].set(yy))(
+                    y_all, target, y)
+                flat = unstack_rows(y_all[:, :-1], plan, t)
             else:
-                flat = y                 # rows already in (img, tile) order
+                y = dcn_fused_batch(
+                    flat, ops.batch.row_id, ops.batch.dep_glb,
+                    ops.batch.dep_cnt, ops.idx, ops.coeff, w2, p.b,
+                    t_in=t, kernel_size=node.kernel_size,
+                    block_p=cfg.block_p, interpret=interpret)[:, :tp]
+                if node.relu:
+                    y = jax.nn.relu(y)
+                y = y * masks_arr[jnp.maximum(ops.batch.oid, 0)]
+                if j == last:
+                    # Scatter scheduled rows back to (image, tile) order;
+                    # ragged-padding rows fall into a dropped dump row.
+                    target = jnp.where(ops.batch.oid >= 0,
+                                       ops.batch.row_id, n * t)
+                    y_all = jnp.zeros((n * t + 1, tp, node.c_out),
+                                      y.dtype)
+                    flat = y_all.at[target].set(y)[:-1]
+                else:
+                    flat = y         # rows already in (img, tile) order
         else:
             pl_j = jax.vmap(lambda ti: tiles_to_plane(ti, grid, h, w))(
                 flat.reshape(n, t, tp, node.c_in))
@@ -976,14 +1038,26 @@ def _run_graph_batch_fused(
     trace: NetworkTrace,
     return_trace: bool,
     tracer: Tracer | None = None,
+    mesh=None,
+    shard_sizes=None,
 ) -> jax.Array:
     """Batch-fused graph execution: the staging unit is a SEGMENT of the
     whole batch (not an image) — segment s+1's batch prepass overlaps
-    segment s's execution on the staging thread."""
+    segment s's execution on the staging thread.
+
+    With a ``mesh`` every DCN segment dispatches through the shard_map
+    kernel over per-shard row slabs (see ``_exec_group_batch_fused``);
+    the prepass chain and all dense segments stay on the TRUE batch, so
+    schedules, traces and numerics are identical to the single-device
+    run. The modeled collective is the one logits all-gather."""
     tr = tracer if tracer is not None else get_tracer()
     n = x.shape[0]
     th, tw = cfg.tile_hw
     itemsize = x.dtype.itemsize
+    plan = None
+    if mesh is not None:
+        d = dict(mesh.shape)["data"]
+        plan = plan_batch_shards(n, d, shard_sizes)
 
     deform_after = [False] * len(segments)
     seen = False
@@ -1020,7 +1094,7 @@ def _run_graph_batch_fused(
             art, plane = _group_batch_prepass(
                 plane_in, seg, convs, grid, m, cfg, max_displacement,
                 cache, need_out_plane=deform_after[s], interp=interpret,
-                tracer=tr)
+                tracer=tr, plan=plan)
         with pre_lock:
             if pre_state["epoch"] == s:
                 pre_state["plane"] = plane
@@ -1038,7 +1112,8 @@ def _run_graph_batch_fused(
             trace.boundary_bytes += n * boundary_bytes(seg, itemsize)
             return None
         planes, dispatches = _exec_group_batch_fused(
-            exec_state["plane"], seg, convs, cfg, interpret, art)
+            exec_state["plane"], seg, convs, cfg, interpret, art,
+            mesh=mesh, plan=plan)
         exec_state["plane"] = planes
         trace.batch_dispatches += dispatches
         trace.overlap.schedule_s += art.schedule_s
@@ -1055,7 +1130,14 @@ def _run_graph_batch_fused(
     # Keep trace.groups image-major like the per-image executors.
     pending.sort(key=lambda g: (g.image, g.group))
     trace.groups.extend(pending)
-    return exec_state["plane"]
+    out = exec_state["plane"]
+    if plan is not None:
+        # Modeled collective traffic: each replica keeps its local rows
+        # until the logits, which cross once (the executor's per-layer
+        # host gathers are simulation plumbing, not modeled DRAM).
+        trace.shards = plan.n_shards
+        trace.allgather_bytes += allgather_nbytes(out)
+    return out
 
 
 def run_graph(
@@ -1068,6 +1150,7 @@ def run_graph(
     return_trace: bool = False,
     schedule_cache: ScheduleCache | None = None,
     tracer: Tracer | None = None,
+    shard_sizes=None,
 ):
     """Execute a backbone graph over a batch: (N,H,W,C) -> (N,H',W',C').
 
@@ -1085,6 +1168,13 @@ def run_graph(
     ``pack``, ``dispatch.*``) into an enabled :class:`~repro.obs.Tracer`;
     default is the current ``repro.obs.get_tracer()`` (a no-op unless
     enabled or overridden via ``use_tracer``).
+
+    With ``config.mesh`` / ``config.data_parallel`` (batch_fused only)
+    the batch dimension shards over the mesh's ``"data"`` axis;
+    ``shard_sizes`` pins an explicit per-shard image count (the serving
+    engine's replica placement — must sum to N, zeros allowed). Traces
+    are placement-independent: per-image schedules and records are built
+    exactly as on a single device.
     """
     if isinstance(x, jax.core.Tracer):
         raise ValueError(
@@ -1120,11 +1210,17 @@ def run_graph(
         y = jnp.zeros((0, h, w, c), x.dtype)
         return (y, trace) if return_trace else y
 
+    mesh = resolve_shard_mesh(cfg.mesh, cfg.data_parallel)
+    if shard_sizes is not None and mesh is None:
+        raise ValueError(
+            "shard_sizes= requires a sharded config (mesh= or "
+            "data_parallel= with a data axis > 1)")
     if cfg.dispatch == "batch_fused":
         with use_tracer(tr):
             y = _run_graph_batch_fused(convs, segments, x, cfg, interpret,
                                        cache, max_displacement, trace,
-                                       return_trace, tracer=tr)
+                                       return_trace, tracer=tr, mesh=mesh,
+                                       shard_sizes=shard_sizes)
         return (y, trace) if return_trace else y
 
     def prepass(i: int):

@@ -44,8 +44,9 @@ from repro.core.scheduler import (DeviceSchedule, TileSchedule, pow2_pad,
                                   schedule_arrays_device, schedule_tiles,
                                   sequential_schedule)
 from repro.core.tiles import TileGrid, tdt_from_coords
-from repro.kernels.dcn_fused import (dcn_fused_batch, dcn_fused_schedule,
-                                     dcn_fused_tile)
+from repro.kernels.dcn_fused import (dcn_fused_batch,
+                                     dcn_fused_batch_sharded,
+                                     dcn_fused_schedule, dcn_fused_tile)
 from repro.kernels.dcn_schedule import tdt_from_coords_device
 from repro.kernels.ops import round_up
 from repro.obs import Tracer, default_registry, get_tracer, use_tracer
@@ -54,6 +55,10 @@ from repro.runtime.packing import (NeighbourTables, build_neighbour_tables,
                                    pack_batch_schedules, pack_output_tile,
                                    pack_plane_operands, pack_schedule_tiles,
                                    plane_to_tiles, tiles_to_plane)
+from repro.runtime.shard import (ShardPlan, allgather_nbytes,
+                                 plan_batch_shards, resolve_shard_mesh,
+                                 shard_batch_schedules, stack_rows,
+                                 unstack_rows)
 from repro.runtime.trace import ImageTrace, PipelineTrace, TileRecord
 
 
@@ -170,6 +175,14 @@ def validate_dispatch_config(cfg) -> None:
     if cfg.watchdog_s is not None and cfg.watchdog_s <= 0:
         raise ValueError(
             f"watchdog_s must be > 0 (or None), got {cfg.watchdog_s}")
+    dp = cfg.data_parallel
+    if dp is not None and dp < 1:
+        raise ValueError(f"data_parallel must be >= 1, got {dp}")
+    if ((cfg.mesh is not None or (dp or 1) > 1)
+            and cfg.dispatch != "batch_fused"):
+        raise ValueError(
+            "mesh=/data_parallel= sharding only applies to "
+            f"dispatch='batch_fused', got dispatch={cfg.dispatch!r}")
 
 
 def clamp_tile_config(cfg, h: int, w: int):
@@ -212,6 +225,14 @@ class PipelineConfig:
     # behavior); a float bounds each wait on a staged prepass, after
     # which the run fails over to synchronous prepass.
     watchdog_s: float | None = None
+    # Batch-dimension scale-out (batch_fused only): an explicit
+    # jax.sharding.Mesh with a "data" axis, or data_parallel=D as the
+    # convenience spelling (builds a (D, 1) host mesh at run time, so
+    # device availability is checked at run, not config construction).
+    # Each mesh device runs the concatenated schedules of its local
+    # images; the only collective is the all-gather at the logits.
+    mesh: Any = None
+    data_parallel: int | None = None
     # Fault injector (repro.testing.faults.FaultInjector) — test/bench
     # only, excluded from config equality: two configs with the same
     # executor knobs are the same config.
@@ -435,11 +456,12 @@ class _BatchArtifacts:
 
     scheds: list[DeviceSchedule]
     cache_hits: list[bool | None]
-    batch: object                 # packing.BatchDispatch
+    batch: object                 # packing.BatchDispatch (None if sharded)
     idx: jax.Array                # (N*T, p_pad, KK, 4) plane-global
     coeff: jax.Array              # (N*T, p_pad, KK, 4)
     schedule_s: float = 0.0
     schedule_device_s: float = 0.0
+    shard: object = None          # shard.ShardedDispatch when sharded
 
 
 def _pipeline_batch_prepass(
@@ -450,11 +472,14 @@ def _pipeline_batch_prepass(
     cfg: PipelineConfig,
     interp: bool,
     tracer: Tracer | None = None,
+    plan: ShardPlan | None = None,
 ) -> _BatchArtifacts:
     """Whole-batch prepass: per-image dense schedules (cached; partial
     batch hits skip scheduling for the hit images) concatenated into one
     batch grid, plus the plane-ordered packed operands — all jnp, so the
-    device scheduling backend keeps the hot path host-free."""
+    device scheduling backend keeps the hot path host-free. With a
+    shard ``plan`` the schedules concatenate PER SHARD instead (each
+    shard keeps its own ragged padding)."""
     tr = tracer if tracer is not None else get_tracer()
     n = coords.shape[0]
     cache = default_schedule_cache() if cfg.use_schedule_cache else None
@@ -468,8 +493,14 @@ def _pipeline_batch_prepass(
                                            cache)
             scheds.append(ds)
             hits.append(hit)
-        batch = pack_batch_schedules(scheds, grid.num_tiles,
-                                     grid.num_tiles)
+        if plan is None:
+            batch = pack_batch_schedules(scheds, grid.num_tiles,
+                                         grid.num_tiles)
+            shard = None
+        else:
+            batch = None
+            shard = shard_batch_schedules(scheds, grid.num_tiles,
+                                          grid.num_tiles, plan)
     schedule_s = ssp.dur
     if cache is not None:
         cache.note_batch_assembly(sum(bool(h) for h in hits),
@@ -485,7 +516,7 @@ def _pipeline_batch_prepass(
     return _BatchArtifacts(
         scheds=scheds, cache_hits=hits, batch=batch, idx=idx, coeff=coeff,
         schedule_s=schedule_s,
-        schedule_device_s=schedule_s if device else 0.0)
+        schedule_device_s=schedule_s if device else 0.0, shard=shard)
 
 
 def _pipeline_batch_exec(
@@ -500,6 +531,8 @@ def _pipeline_batch_exec(
     interp: bool,
     trace: PipelineTrace,
     return_trace: bool,
+    mesh=None,
+    plan: ShardPlan | None = None,
 ) -> jax.Array:
     n, h, w = x.shape[0], x.shape[1], x.shape[2]
     c = x.shape[3]
@@ -510,17 +543,37 @@ def _pipeline_batch_exec(
         cfg.faults.check("dispatch", images=n)
 
     x_tiles = jax.vmap(lambda p: plane_to_tiles(p, grid))(x)  # (N, T, tp, C)
-    y_rows = dcn_fused_batch(
-        x_tiles.reshape(n * t, tp, c), art.batch.row_id, art.batch.dep_glb,
-        art.batch.dep_cnt, art.idx, art.coeff, w2, b,
-        t_in=t, kernel_size=kernel_size, block_p=cfg.block_p,
-        interpret=interp)[:, :tp]
-    # Scatter valid rows back to (image, tile) order; ragged-padding rows
-    # land in a dump row that is dropped.
-    target = jnp.where(art.batch.oid >= 0, art.batch.row_id, n * t)
-    y_all = jnp.zeros((n * t + 1, tp, c_out), x.dtype)
-    y_all = y_all.at[target].set(y_rows.astype(x.dtype))
-    y_tiles = y_all[:-1].reshape(n, t, tp, c_out)
+    if plan is None:
+        y_rows = dcn_fused_batch(
+            x_tiles.reshape(n * t, tp, c), art.batch.row_id,
+            art.batch.dep_glb, art.batch.dep_cnt, art.idx, art.coeff,
+            w2, b, t_in=t, kernel_size=kernel_size, block_p=cfg.block_p,
+            interpret=interp)[:, :tp]
+        # Scatter valid rows back to (image, tile) order; ragged-padding
+        # rows land in a dump row that is dropped.
+        target = jnp.where(art.batch.oid >= 0, art.batch.row_id, n * t)
+        y_all = jnp.zeros((n * t + 1, tp, c_out), x.dtype)
+        y_all = y_all.at[target].set(y_rows.astype(x.dtype))
+        y_tiles = y_all[:-1].reshape(n, t, tp, c_out)
+    else:
+        sh = art.shard
+        y_rows = dcn_fused_batch_sharded(
+            stack_rows(x_tiles.reshape(n * t, tp, c), plan, t),
+            sh.row_id, sh.dep_glb, sh.dep_cnt,
+            stack_rows(art.idx, plan, t), stack_rows(art.coeff, plan, t),
+            w2, b, mesh=mesh, t_in=t, kernel_size=kernel_size,
+            block_p=cfg.block_p, interpret=interp)[:, :, :tp]
+        # Per-shard scatter (row ids are shard-local) stays on each
+        # device; the unstack of the result is the run's ONE all-gather.
+        slab = plan.n_max * t
+        target = jnp.where(sh.oid >= 0, sh.row_id, slab)
+        y_all = jnp.zeros((plan.n_shards, slab + 1, tp, c_out), x.dtype)
+        y_all = jax.vmap(lambda ya, tg, yy: ya.at[tg].set(yy))(
+            y_all, target, y_rows.astype(x.dtype))
+        y_flat = unstack_rows(y_all[:, :-1], plan, t)
+        trace.allgather_bytes += allgather_nbytes(y_flat)
+        trace.shards = plan.n_shards
+        y_tiles = y_flat.reshape(n, t, tp, c_out)
     y = jax.vmap(lambda yt: tiles_to_plane(yt, grid, h, w))(y_tiles)
 
     trace.batch_dispatches += 1
@@ -619,10 +672,14 @@ def dcn_pipeline(
 
     if cfg.dispatch == "batch_fused":
         # Batch-level prepass replaces the per-image staging loop: the
-        # whole batch's schedules concatenate into ONE kernel dispatch.
+        # whole batch's schedules concatenate into ONE kernel dispatch
+        # (per shard, when a mesh shards the batch axis).
+        mesh = resolve_shard_mesh(cfg.mesh, cfg.data_parallel)
+        plan = (plan_batch_shards(n, dict(mesh.shape)["data"])
+                if mesh is not None else None)
         with tr.timed("prepass", batch=n) as psp:
             art = _pipeline_batch_prepass(coords, grid, m, p_pad, cfg,
-                                          interp, tracer=tr)
+                                          interp, tracer=tr, plan=plan)
         trace.overlap.add_span(psp)
         trace.overlap.prepass_wait_s += psp.dur
         trace.overlap.schedule_s += art.schedule_s
@@ -630,7 +687,7 @@ def dcn_pipeline(
         with use_tracer(tr):
             y = _pipeline_batch_exec(x, art, w2, params.b, kernel_size,
                                      cfg, grid, m, interp, trace,
-                                     return_trace)
+                                     return_trace, mesh=mesh, plan=plan)
         return (y, trace) if return_trace else y
 
     def prepass(i: int) -> _ImageArtifacts:

@@ -220,6 +220,12 @@ class PipelineTrace:
     # Batch-fused dispatches: kernel calls shared by the WHOLE batch
     # (one per layer segment), counted here instead of per image.
     batch_dispatches: int = 0
+    # Batch-axis scale-out: mesh shards the dispatch ran over, and the
+    # measured byte volume of the single logits all-gather (0 when
+    # single-device). Collective traffic, so NOT part of the per-image
+    # DRAM model the simulator cross-checks.
+    shards: int = 1
+    allgather_bytes: int = 0
 
     @property
     def packed_bytes(self) -> int:
@@ -327,6 +333,12 @@ class NetworkTrace:
     # Batch-fused dispatches: kernel calls shared by the WHOLE batch
     # (one per layer segment), counted here instead of per group trace.
     batch_dispatches: int = 0
+    # Batch-axis scale-out: mesh shards the dispatch ran over, and the
+    # measured byte volume of the single logits all-gather (0 when
+    # single-device). Collective traffic, so NOT part of the per-image
+    # DRAM model the simulator cross-checks.
+    shards: int = 1
+    allgather_bytes: int = 0
 
     @property
     def kernel_dispatches(self) -> int:

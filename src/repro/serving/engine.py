@@ -266,6 +266,16 @@ class DcnServingEngine:
       (vision inference has no iterative decode), so slots free each
       step and admission is purely a queue->pool refill. ``submit`` is
       thread-safe; ``step``/``drain`` are driven by one serving loop.
+
+    Scale-out: a ``graph=GraphConfig(..., data_parallel=D)`` (or an
+    explicit ``mesh=``) partitions the slot pool contiguously over the
+    D data replicas — admission targets the replica with the most free
+    slots, and each step passes its per-replica occupancy to the
+    executor as ``shard_sizes`` so shard placement is exactly slot
+    placement. ``stats`` then reports ``replicas``/``per_replica``
+    image, dispatch and DRAM counters plus the logits
+    ``allgather_bytes``; per-image schedules and traces are placement-
+    independent.
     """
 
     def __init__(self, params, cfg, *, graph=None, cache_size: int = 256,
@@ -374,10 +384,47 @@ class DcnServingEngine:
             dataclasses.replace(self.graph_cfg, dispatch="batch_fused"),
             cfg.img_size, cfg.img_size)
         # Degraded mode: per-image batched dispatch, serial staging — a
-        # fault in one image's dispatch cannot touch another's.
+        # fault in one image's dispatch cannot touch another's. Sharding
+        # is cleared too: "batched" rejects mesh=/data_parallel=, and a
+        # degraded step must not depend on collective health anyway.
         self._degraded_cfg = dataclasses.replace(
-            self._step_cfg, dispatch="batched", staging_depth=1)
+            self._step_cfg, dispatch="batched", staging_depth=1,
+            mesh=None, data_parallel=None)
         self._faults = self._step_cfg.faults
+        # Scale-out: with a sharded step config (mesh=/data_parallel=)
+        # the slot pool partitions contiguously over the mesh's data
+        # replicas — admission targets the replica with the most free
+        # slots, and each step passes its per-replica occupancy as
+        # shard_sizes so shard placement equals slot placement.
+        from repro.runtime.shard import (plan_batch_shards,
+                                         resolve_shard_mesh)
+        _mesh = resolve_shard_mesh(self._step_cfg.mesh,
+                                   self._step_cfg.data_parallel)
+        self.replicas = (dict(_mesh.shape)["data"]
+                         if _mesh is not None else 1)
+        if self.replicas > self.n_slots:
+            raise ValueError(
+                f"slots={self.n_slots} cannot cover {self.replicas} "
+                f"data replicas — every replica needs at least one "
+                f"slot (raise slots= or shrink the mesh)")
+        self._slot_replica = [
+            r for r, (a, b) in enumerate(
+                plan_batch_shards(self.n_slots, self.replicas).spans)
+            for _ in range(b - a)]
+        self._m_replica = [
+            {"images": self.metrics.counter(
+                 f"serving.replica{r}.images",
+                 help=f"images served on data replica {r}"),
+             "dispatches": self.metrics.counter(
+                 f"serving.replica{r}.dispatches",
+                 help=f"kernel dispatches executed on replica {r}"),
+             "dram_bytes": self.metrics.counter(
+                 f"serving.replica{r}.dram_bytes",
+                 help=f"modeled DRAM bytes of replica {r}'s images")}
+            for r in range(self.replicas)]
+        self._m_allgather = self.metrics.counter(
+            "serving.allgather_bytes",
+            help="logits all-gather traffic of sharded steps")
 
     # Counter-backed views keep the pre-registry attribute API
     # (``eng.requests`` etc.) readable while the registry is the single
@@ -419,6 +466,7 @@ class DcnServingEngine:
         """Fold one executor trace into the engine counters (caller must
         hold ``self._lock``)."""
         self._m_dispatches.inc(trace.kernel_dispatches)
+        self._m_allgather.inc(getattr(trace, "allgather_bytes", 0))
         self.overlap.merge(trace.overlap)
         self.last_trace = trace
 
@@ -558,7 +606,8 @@ class DcnServingEngine:
         with self._lock:
             return len(self._queue)
 
-    def _run_batch(self, images: list[np.ndarray], step_cfg):
+    def _run_batch(self, images: list[np.ndarray], step_cfg,
+                   shard_sizes=None):
         """One executor call over a list of images -> (outputs, trace)."""
         from repro.models.dcn_models import _apply_head
         from repro.runtime import run_graph
@@ -568,19 +617,31 @@ class DcnServingEngine:
             self.params["convs"], self.net_graph, xb, config=step_cfg,
             max_displacement=self.cfg.max_displacement,
             return_trace=True, schedule_cache=self.cache,
-            tracer=self.tracer)
+            tracer=self.tracer, shard_sizes=shard_sizes)
         out = np.asarray(_apply_head(self.params, self.cfg, y,
                                      self.cfg.name == "segnet"))
         return out, trace
 
-    def _execute_isolated(self, images: list[np.ndarray]):
+    def _shard_sizes(self, repl: list[int] | None):
+        """Per-replica image counts of one step's batch (None when the
+        engine is unsharded). ``repl`` is slot-ordered, and slots map to
+        replicas contiguously, so the batch is shard-contiguous by
+        construction."""
+        if repl is None or self.replicas <= 1:
+            return None
+        return [repl.count(r) for r in range(self.replicas)]
+
+    def _execute_isolated(self, images: list[np.ndarray],
+                          repl: list[int] | None = None):
         """Serve one step's images with request isolation.
 
         Returns ``(outs, traces, failures, degraded)``: ``outs`` maps
         batch position -> output array, ``failures`` maps batch
         position -> exception, ``traces`` is the executor traces to
         absorb, ``degraded`` marks a step that fell back to per-image
-        batched dispatch.
+        batched dispatch. ``repl`` is the per-position replica id of a
+        sharded engine (drives ``shard_sizes`` so shard placement
+        follows slot placement, including across the evicted retry).
 
         Fault containment ladder: (1) the coalesced ``batch_fused`` run;
         (2) on an exception that names the offending image
@@ -592,7 +653,9 @@ class DcnServingEngine:
         """
         n = len(images)
         try:
-            out, trace = self._run_batch(images, self._step_cfg)
+            out, trace = self._run_batch(
+                images, self._step_cfg,
+                shard_sizes=self._shard_sizes(repl))
             return dict(enumerate(out)), [trace], {}, False
         except Exception as e:   # isolation boundary: any executor fault
             first = e
@@ -607,8 +670,11 @@ class DcnServingEngine:
             if not keep:
                 return {}, [], failures, False
             try:
-                out, trace = self._run_batch([images[k] for k in keep],
-                                             self._step_cfg)
+                out, trace = self._run_batch(
+                    [images[k] for k in keep], self._step_cfg,
+                    shard_sizes=self._shard_sizes(
+                        [repl[k] for k in keep]
+                        if repl is not None else None))
                 return ({k: out[z] for z, k in enumerate(keep)},
                         [trace], failures, False)
             except Exception:    # retry faulted too -> degrade
@@ -628,6 +694,50 @@ class DcnServingEngine:
             except Exception as ek:
                 failures[k] = ek
         return outs, traces, failures, True
+
+    def _admission_order(self) -> list[int]:
+        """Free slots in admission order (caller holds the lock).
+
+        Unsharded engines refill lowest-slot-first. Sharded engines
+        repeatedly target the replica with the MOST free slots (ties to
+        the lowest replica): step batches stay balanced across
+        replicas, so the SPMD slab — sized by the fullest replica —
+        stays minimal."""
+        free = [i for i in range(self.n_slots) if self._slots[i] is None]
+        if self.replicas <= 1:
+            return free
+        by_r: list[list[int]] = [[] for _ in range(self.replicas)]
+        for i in free:
+            by_r[self._slot_replica[i]].append(i)
+        order: list[int] = []
+        while True:
+            r = max(range(self.replicas), key=lambda q: len(by_r[q]))
+            if not by_r[r]:
+                return order
+            order.append(by_r[r].pop(0))
+
+    def _attribute_replicas(self, repl: list[int], traces,
+                            failures) -> None:
+        """Per-replica serving counters for one step (caller holds the
+        lock). Images count by slot placement; every replica that
+        served >= 1 image executed each of the step's SPMD kernel
+        dispatches locally; per-image modeled DRAM comes from the
+        executed trace's per-image groups (clean coalesced steps only —
+        retried/degraded steps change batch positions mid-flight, so
+        their DRAM stays in the engine-wide counters)."""
+        dispatches = sum(t.kernel_dispatches for t in traces)
+        for k, r in enumerate(repl):
+            if k not in failures:
+                self._m_replica[r]["images"].inc()
+        for r in sorted(set(repl)):
+            self._m_replica[r]["dispatches"].inc(dispatches)
+        if len(traces) == 1 and not failures:
+            per_img: dict[int, int] = {}
+            for gt in traces[0].groups:
+                per_img[gt.image] = (per_img.get(gt.image, 0)
+                                     + gt.total_dram_bytes)
+            for k, r in enumerate(repl):
+                self._m_replica[r]["dram_bytes"].inc(per_img.get(k, 0))
 
     def step(self) -> list[DcnRequest]:
         """One continuous-batching serving step.
@@ -654,9 +764,7 @@ class DcnServingEngine:
         with tr.span("serve.admit", queue_depth=self.queue_depth):
             with self._lock:
                 now = self._clock()
-                for i in range(self.n_slots):
-                    if self._slots[i] is not None:
-                        continue
+                for i in self._admission_order():
                     while self._queue:
                         req, j = self._queue.popleft()
                         self._queue_room.notify_all()
@@ -681,10 +789,13 @@ class DcnServingEngine:
         hits0 = self.cache.info()["image_hits"] if tr.enabled else 0
         mark = len(tr) if tr.enabled else 0
         images = [req.x[j] for _, req, j in occupied]
+        # Slot-ordered, and the slot->replica map is contiguous, so the
+        # step batch is shard-contiguous by construction.
+        repl = [self._slot_replica[i] for i, _, _ in occupied]
         with tr.timed("serve.step", step=step_id,
                       width=len(occupied)) as ssp:
             outs, traces, failures, degraded = \
-                self._execute_isolated(images)
+                self._execute_isolated(images, repl)
             dispatches = sum(t.kernel_dispatches for t in traces)
             dram = sum(t.total_dram_bytes for t in traces)
             ssp.set(dispatches=dispatches, dram_bytes=dram,
@@ -713,6 +824,7 @@ class DcnServingEngine:
             self._m_images.inc(len(occupied))
             for t in traces:
                 self._absorb_trace(t)
+            self._attribute_replicas(repl, traces, failures)
             self.last_step_faulted = bool(failures)
             for k, (i, req, j) in enumerate(occupied):
                 self._slots[i] = None
@@ -813,6 +925,13 @@ class DcnServingEngine:
                 "schedule_s": self.overlap.schedule_s,
                 "schedule_device_frac": self.overlap.schedule_device_frac,
                 "slots": self.n_slots,
+                "replicas": self.replicas,
+                "per_replica": [
+                    {"images": c["images"].count,
+                     "dispatches": c["dispatches"].count,
+                     "dram_bytes": c["dram_bytes"].count}
+                    for c in self._m_replica],
+                "allgather_bytes": self._m_allgather.count,
                 "queue_depth": len(self._queue),
                 "steps": self.steps,
                 "host_schedule_builds": self.host_schedule_builds,

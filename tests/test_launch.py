@@ -115,3 +115,25 @@ class TestBuildStep:
 
     def test_mesh_chips(self):
         assert mesh_chips(make_host_mesh(1, 1)) == 1
+
+
+class TestHostMeshValidation:
+    def test_too_many_devices_is_a_clear_error(self):
+        """Over-asking must name the fix (XLA_FLAGS recipe), not
+        surface as an opaque reshape failure."""
+        have = jax.device_count()
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            make_host_mesh(have + 1, 1)
+        with pytest.raises(ValueError,
+                           match=rf"needs {2 * (have + 3)} devices"):
+            make_host_mesh(have + 3, 2)
+
+    def test_degenerate_axes_rejected(self):
+        with pytest.raises(ValueError, match="axes must be >= 1"):
+            make_host_mesh(0, 1)
+        with pytest.raises(ValueError, match="axes must be >= 1"):
+            make_host_mesh(1, -2)
+
+    def test_full_device_count_is_valid(self):
+        mesh = make_host_mesh(jax.device_count(), 1)
+        assert dict(mesh.shape)["data"] == jax.device_count()
