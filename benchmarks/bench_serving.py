@@ -196,6 +196,10 @@ def run(csv=print, img: int = 13, n_deform: int = 2,
                 - s["image_hit_rate"]) < 1e-12
         and snap["serving.host_schedule_builds"]
             == s["host_schedule_builds"]
+        and snap["serving.plan_cache_hits"] == s["plan_cache_hits"]
+        and snap["serving.tuned_groups"] == s["tuned_groups"]
+        and abs(snap["serving.autotune_search_s"]
+                - s["autotune_search_s"]) < 1e-12
         and lat["count"] == s["latency"]["count"])
     dps = (s["kernel_dispatches"] / s["steps"]) if s["steps"] else 0.0
     csv(f"serving_metrics,metrics={len(snap)},"

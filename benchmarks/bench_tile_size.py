@@ -1,33 +1,44 @@
-"""Paper Fig. 17: DRAM energy vs tile size (VGG19/SegNet-F).
+"""Paper Fig. 17: DRAM energy vs tile size — square AND rectangular.
 
-Smaller tiles -> finer dependency tracking -> fewer wasted bytes per load;
-the paper finds the smallest tile size wins. We sweep the same 5x5..2x2
-range over measured TDTs and report normalized DRAM energy.
+Smaller tiles -> finer dependency tracking -> fewer wasted bytes per
+load; the paper finds the smallest tile size wins. ``run`` sweeps the
+paper's square 2x2..8x8 range over measured TDTs; ``run_rect`` extends
+the sweep to rectangular ``(tile_h, tile_w)`` shapes — the exact design
+space the autotuner (``repro.tuning``) searches per fused group. The
+FIFO capacity is derived from a fixed byte budget, so every shape
+competes on iso on-chip hardware. Both emit machine-readable records
+through ``smoke.py`` (``BENCH_tiles.json``) so ``--compare`` tracks
+tile-sensitivity regressions.
 """
 
 from __future__ import annotations
 
 from repro.core.simulator import dram_energy, simulate_strategies
+from repro.core.tiles import TileGrid, per_pixel_input_tiles, \
+    tdt_from_coords
 
-from benchmarks.workloads import measured_tdt
+from benchmarks.workloads import measured_coords, measured_tdt
 
 BUF_BYTES = 128 * 1024
 
 
-def run(csv=print):
+def run(csv=print, h: int = 56, w: int = 56, c: int = 256,
+        tiles_per_side=(2, 3, 4, 5, 7, 8), seed: int = 0,
+        offset_scale: float = 6.0, buffer_bytes: int = BUF_BYTES):
+    """Square Fig. 17 sweep (paper reproduction + monotonicity check)."""
     results = {}
-    for tiles_per_side in (2, 3, 4, 5, 7, 8):
-        B, pp, grid = measured_tdt(tiles_per_side=tiles_per_side)
-        rep = simulate_strategies(B, pp, grid, channels=256, c_out=256,
+    for tps in tiles_per_side:
+        B, pp, grid = measured_tdt(h, w, c, tps, seed, offset_scale)
+        rep = simulate_strategies(B, pp, grid, channels=c, c_out=c,
                                   kernel_size=3,
-                                  buffer_bytes=BUF_BYTES)["scheduled"]
+                                  buffer_bytes=buffer_bytes)["scheduled"]
         e = dram_energy(rep, exec_time_s=1e-3)
-        results[tiles_per_side] = (rep.total_dram_bytes, e)
+        results[tps] = (rep.total_dram_bytes, e)
     e_max = max(e for _, e in results.values())
     for tps, (bytes_, e) in sorted(results.items()):
-        side = 56 // tps
+        side = h // tps
         csv(f"fig17_tile_size,tile={side}x{side},dram_bytes={bytes_},"
-            f"energy_rel={e/e_max:.3f}")
+            f"energy_rel={e / e_max:.3f}")
     # paper: smallest tile size -> least DRAM energy
     sizes = sorted(results)
     assert results[sizes[-1]][1] <= results[sizes[0]][1], \
@@ -35,5 +46,36 @@ def run(csv=print):
     return results
 
 
+def run_rect(csv=print, h: int = 56, w: int = 56, c: int = 256,
+             sides=(2, 4, 8, 16), seed: int = 0,
+             offset_scale: float = 6.0,
+             buffer_bytes: int = BUF_BYTES):
+    """Rectangular ``(tile_h, tile_w)`` sweep over the same measured
+    coords: one TDT per grid, scheduled DRAM bytes per shape, plus the
+    best shape (what the autotuner should find for this layer)."""
+    coords = measured_coords(h, w, c, seed, offset_scale)
+    results = {}
+    for th in sides:
+        for tw in sides:
+            if th > h or tw > w:
+                continue
+            grid = TileGrid(h, w, th, tw)
+            B = tdt_from_coords(coords, grid, grid)
+            pp = per_pixel_input_tiles(coords, grid)
+            rep = simulate_strategies(
+                B, pp, grid, channels=c, c_out=c, kernel_size=3,
+                buffer_bytes=buffer_bytes)["scheduled"]
+            results[(th, tw)] = rep.total_dram_bytes
+    for (th, tw), bytes_ in sorted(results.items()):
+        csv(f"fig17_rect,tile_h={th},tile_w={tw},dram_bytes={bytes_}")
+    (bth, btw), best = min(results.items(), key=lambda kv: kv[1])
+    worst = max(results.values())
+    csv(f"rect_best,tile_h={bth},tile_w={btw},dram_bytes={best},"
+        f"worst_dram_bytes={worst},"
+        f"spread={worst / best if best else 0.0:.3f}")
+    return results
+
+
 if __name__ == "__main__":
     run()
+    run_rect()

@@ -45,6 +45,12 @@ the CI bench-smoke job) if:
     engine, so an unbalanced replica placement or a chatty collective
     fails the gate even though forced host devices share the CI
     worker's cores (wall-clock rps is reported, never gated);
+  * the autotuner bench (ISSUE 10 gate) lets a tuned plan lose to the
+    greedy baseline on ANY swept (net, img_size) case, shows no case
+    with a >5% executed-DRAM reduction, breaks the executed-trace ==
+    DRAM-simulator equality under a tuned plan, diverges numerically
+    from the greedy run, or fails to serve the persisted plan from a
+    FRESH plan cache over the same directory (second-run disk hit);
   * ``--compare BASELINE_DIR`` is given (previous main-branch
     ``BENCH_*.json`` artifacts) and scheduled DRAM tile loads or a
     dispatch count (batched per-image, batch-fused at batch>1, or
@@ -52,14 +58,18 @@ the CI bench-smoke job) if:
     baseline, or serving requests/sec or the serving schedule-cache
     image hit rate drops more than 10% below it (direction-aware:
     rps and hit rate are higher-is-better), or the chaos bench loses
-    a request (fails on >0) or its healthy p99 ratio climbs high.
+    a request (fails on >0) or its healthy p99 ratio climbs high, or
+    the tuned total DRAM bytes / tuned-vs-greedy max ratio (floor 1.0)
+    / best rectangular-tile DRAM bytes regress against the baseline.
 
-``--suite {all,core,resilience,scaleout}`` selects which benches run:
-``core`` is the perf suite above, ``resilience`` only the chaos bench
-(its own CI leg), ``scaleout`` only the multi-device sweep (the
-``multidevice`` CI leg; the sweep spawns its own forced-device
-subprocesses, so any host can run it), ``all`` (default) everything.
-Gates and ``--compare`` checks apply only to suites that ran.
+``--suite {all,core,resilience,scaleout,autotune}`` selects which
+benches run: ``core`` is the perf suite above, ``resilience`` only the
+chaos bench (its own CI leg), ``scaleout`` only the multi-device sweep
+(the ``multidevice`` CI leg; the sweep spawns its own forced-device
+subprocesses, so any host can run it), ``autotune`` the tile-shape
+sweep + simulator-guided autotuner bench (its own CI leg), ``all``
+(default) everything. Gates and ``--compare`` checks apply only to
+suites that ran.
 """
 
 from __future__ import annotations
@@ -74,9 +84,10 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:          # allow `python benchmarks/smoke.py`
     sys.path.insert(0, _ROOT)
 
-from benchmarks import (bench_fusion, bench_graph, bench_platforms,
-                        bench_resilience, bench_scheduling,
-                        bench_serving)
+from benchmarks import (bench_autotune, bench_fusion, bench_graph,
+                        bench_platforms, bench_resilience,
+                        bench_scheduling, bench_serving,
+                        bench_tile_size)
 
 TINY_TDT = dict(h=16, w=16, c=16, tiles_per_side=4)
 
@@ -144,6 +155,14 @@ def _compare_baseline(baseline_dir: str, suites: dict) -> int:
          lambda p: float(p["scaleout_modeled_speedup"]), "higher"),
         ("BENCH_platforms.json", "scale-out all-gather bytes",
          lambda p: int(p["scaleout_allgather_bytes"]), "lower"),
+        ("BENCH_autotune.json", "tuned total DRAM bytes",
+         lambda p: int(p["autotune_tuned_total_bytes"]), "lower"),
+        # ratio can only flake by run-to-run search jitter; the floor
+        # keeps anything <= 1.0 (never losing) from ever failing.
+        ("BENCH_autotune.json", "tuned-vs-greedy max DRAM ratio",
+         lambda p: float(p["autotune_max_ratio"]), "lower", 1.0),
+        ("BENCH_tiles.json", "best rectangular-tile DRAM bytes",
+         lambda p: int(p["tiles_best_dram_bytes"]), "lower"),
     ]
     for fname, what, extract, direction, *floor in checks:
         if fname not in suites:
@@ -482,6 +501,66 @@ def _gate_scaleout(suites: dict) -> int:
     return rc
 
 
+def _gate_autotune(suites: dict) -> int:
+    """ISSUE 10 gate: simulator-guided tuned plans must never lose to
+    the greedy baseline on executed DRAM traffic for any swept
+    (net, img_size) case, at least one case must show a >5% reduction,
+    tuned executed traces must stay EXACTLY equal to the DRAM
+    simulator, tuned numerics must match greedy, and the persisted plan
+    must hit from a FRESH plan cache on the second run."""
+    rc = 0
+    if "BENCH_autotune.json" in suites:
+        payload = suites["BENCH_autotune.json"]
+        summary = _record(payload, "autotune_summary")
+        if summary is None:
+            print("ERROR: autotune_summary record missing from "
+                  "bench_autotune")
+            rc = 1
+        else:
+            max_ratio = float(summary["max_ratio"])
+            min_ratio = float(summary["min_ratio"])
+            payload["autotune_max_ratio"] = max_ratio
+            payload["autotune_min_ratio"] = min_ratio
+            payload["autotune_tuned_total_bytes"] = int(
+                summary["tuned_total_bytes"])
+            payload["autotune_greedy_total_bytes"] = int(
+                summary["greedy_total_bytes"])
+            payload["autotune_search_s_total"] = float(
+                summary["search_s_total"])
+            if max_ratio > 1.0:
+                print(f"ERROR: tuned plan LOSES to greedy on a swept "
+                      f"case: max tuned/greedy DRAM ratio "
+                      f"{max_ratio:.4f} > 1.0")
+                rc = 1
+            if min_ratio >= 0.95:
+                print(f"ERROR: no swept case shows a >5% tuned DRAM "
+                      f"reduction (best ratio {min_ratio:.4f})")
+                rc = 1
+            if summary["plan_cache_hit_on_second_run"] != "yes":
+                print("ERROR: persisted plan missed from a fresh plan "
+                      "cache on the second run")
+                rc = 1
+            if summary["all_trace_exact"] != "yes":
+                print("ERROR: tuned executed trace != DRAM simulator")
+                rc = 1
+            if summary["all_numerics_ok"] != "yes":
+                print("ERROR: tuned run diverges numerically from the "
+                      "greedy run")
+                rc = 1
+    if "BENCH_tiles.json" in suites:
+        payload = suites["BENCH_tiles.json"]
+        best = _record(payload, "rect_best")
+        if best is None:
+            print("ERROR: rect_best record missing from bench_tile_size")
+            rc = 1
+        else:
+            payload["tiles_best_dram_bytes"] = int(best["dram_bytes"])
+            payload["tiles_best_tile"] = (f"{best['tile_h']}x"
+                                          f"{best['tile_w']}")
+            payload["tiles_spread"] = float(best["spread"])
+    return rc
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=".", help="output directory")
@@ -490,7 +569,8 @@ def main(argv=None) -> int:
                          "artifacts; fail on >10%% regression of "
                          "scheduled loads / dispatch count")
     ap.add_argument("--suite", default="all",
-                    choices=("all", "core", "resilience", "scaleout"),
+                    choices=("all", "core", "resilience", "scaleout",
+                             "autotune"),
                     help="which bench suites to run (default: all)")
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
@@ -557,6 +637,22 @@ def main(argv=None) -> int:
                 device_counts=(1, 2, 4), n_requests=12, img=16,
                 n_deform=2, width_mult=0.125, tile=4, slots=4)),
         ])
+    if args.suite in ("all", "autotune"):
+        suites["BENCH_tiles.json"] = _collect("tiles", [
+            (bench_tile_size.run, dict(h=16, w=16, c=16,
+                                       tiles_per_side=(2, 4, 8),
+                                       buffer_bytes=4096)),
+            # rect config picked so the best shape is an INTERIOR point
+            # (8x8, spread ~2x) — the sweep demonstrates a real search
+            # space, not a degenerate whole-plane winner.
+            (bench_tile_size.run_rect, dict(h=24, w=24, c=24,
+                                            sides=(2, 4, 8, 16),
+                                            buffer_bytes=2048)),
+        ])
+        suites["BENCH_autotune.json"] = _collect("autotune", [
+            (bench_autotune.run, dict(
+                cache_dir=os.path.join(args.out, "plan-cache"))),
+        ])
 
     # Gates apply only to suites that ran (--suite). The CI bench-smoke
     # job fails on the nonzero exit.
@@ -566,6 +662,7 @@ def main(argv=None) -> int:
     rc = max(rc, _gate_serving(suites))
     rc = max(rc, _gate_resilience(suites))
     rc = max(rc, _gate_scaleout(suites))
+    rc = max(rc, _gate_autotune(suites))
 
     if args.compare:
         rc = max(rc, _compare_baseline(args.compare, suites))

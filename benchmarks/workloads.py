@@ -102,13 +102,13 @@ def executor_case(h: int, w: int, c: int, c_out: int, seed: int = 0,
     return params, x
 
 
-@functools.lru_cache(maxsize=32)
-def measured_tdt(h: int = 56, w: int = 56, c: int = 256,
-                 tiles_per_side: int = 5, seed: int = 0,
-                 offset_scale: float = 6.0):
-    """Run a REAL stage-1 offset conv on a synthetic image and build the
-    TDT from the resulting coordinates (the paper's §III methodology, VGG16
-    conv3-scale layer). Returns (B, per_pixel_tiles, grid)."""
+@functools.lru_cache(maxsize=8)
+def measured_coords(h: int = 56, w: int = 56, c: int = 256,
+                    seed: int = 0, offset_scale: float = 6.0):
+    """Sampling coordinates of a REAL stage-1 offset conv on a synthetic
+    image (the paper's §III methodology, VGG16 conv3-scale layer).
+    Coords are tiling-independent, so one run serves every grid the
+    tile-shape sweeps try."""
     key = jax.random.PRNGKey(seed)
     params = randomize_offset_conv(init_deformable_conv(key, c, c),
                                    jax.random.fold_in(key, 1),
@@ -117,7 +117,16 @@ def measured_tdt(h: int = 56, w: int = 56, c: int = 256,
                       channels=3)["images"]
     x = jnp.tile(jnp.asarray(img), (1, 1, 1, c // 3 + 1))[..., :c]
     offsets = conv2d(x, params.w_off, params.b_off)
-    coords = offsets_to_coords(offsets.astype(jnp.float32), 3, "dcn2")[0]
+    return offsets_to_coords(offsets.astype(jnp.float32), 3, "dcn2")[0]
+
+
+@functools.lru_cache(maxsize=32)
+def measured_tdt(h: int = 56, w: int = 56, c: int = 256,
+                 tiles_per_side: int = 5, seed: int = 0,
+                 offset_scale: float = 6.0):
+    """TDT of :func:`measured_coords` under a square grid. Returns
+    (B, per_pixel_tiles, grid)."""
+    coords = measured_coords(h, w, c, seed, offset_scale)
     grid = make_square_grid(h, w, tiles_per_side)
     B = np.asarray(tdt_from_coords(coords, grid, grid))
     pp = np.asarray(per_pixel_input_tiles(coords, grid))

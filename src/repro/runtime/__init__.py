@@ -41,6 +41,7 @@ from repro.runtime.graph import (
     build_graph,
     partition_graph,
     partition_graph_cached,
+    partition_graph_tuned,
 )
 from repro.runtime.packing import (
     BatchDispatch,
@@ -105,6 +106,7 @@ __all__ = [
     "build_graph",
     "partition_graph",
     "partition_graph_cached",
+    "partition_graph_tuned",
     "GroupTrace",
     "ImageTrace",
     "LatencyStats",

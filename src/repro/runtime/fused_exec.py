@@ -131,6 +131,17 @@ class GraphConfig:
     # the all-gather at the logits.
     mesh: Any = None
     data_parallel: int | None = None
+    # Simulator-guided plan autotuning (repro.tuning): "off" = greedy
+    # partition at the default tile; "offline" = search (once per plan
+    # key, cached) for the best cuts + per-group tile shapes;
+    # "cached-only" = use a cached plan if present, never search (for
+    # replicas that must not pay search latency).
+    autotune: str = "off"
+    # Directory for the persistent TunedPlan store; None = in-memory
+    # only (the plan still survives across engines in this process).
+    plan_cache_dir: str | None = None
+    # Max simulator evaluations the search may pay per plan.
+    autotune_budget: int = 128
     # Fault injector (repro.testing.faults.FaultInjector) — test/bench
     # only, excluded from config equality.
     faults: Any = dataclasses.field(default=None, compare=False)
@@ -222,6 +233,16 @@ def run_graph_dense(convs: list, graph: NetGraph, x: jax.Array,
                                           max_displacement)
         outs.append(plane)
     return jnp.stack(outs)
+
+
+def _segment_grid(seg: FusedGroup, th: int, tw: int) -> TileGrid:
+    """Tile grid for one fused group: the group's autotuned tile shape
+    when the plan set one, the config default otherwise — either way
+    clamped to the group's plane (interior groups sit at lower
+    resolution than the input)."""
+    if seg.tile_hw is not None:
+        th, tw = seg.tile_hw
+    return TileGrid(seg.h, seg.w, min(th, seg.h), min(tw, seg.w))
 
 
 def _inter_capacity(cfg: GraphConfig, group: FusedGroup, node,
@@ -468,8 +489,7 @@ def _image_prepass(
                 plane = apply_boundary_dense(plane, seg)
             arts.append(None)
         else:
-            h, w = seg.h, seg.w
-            grid = TileGrid(h, w, min(th, h), min(tw, w))
+            grid = _segment_grid(seg, th, tw)
             m = (grid.num_tiles if cfg.buffer_tiles is None
                  else cfg.buffer_tiles)
             art, plane = _group_schedule_artifacts(
@@ -1088,7 +1108,7 @@ def _run_graph_batch_fused(
             plane = (apply_boundary_batch(plane_in, seg)
                      if deform_after[s] else plane_in)
         else:
-            grid = TileGrid(seg.h, seg.w, min(th, seg.h), min(tw, seg.w))
+            grid = _segment_grid(seg, th, tw)
             m = (grid.num_tiles if cfg.buffer_tiles is None
                  else cfg.buffer_tiles)
             art, plane = _group_batch_prepass(
@@ -1151,6 +1171,7 @@ def run_graph(
     schedule_cache: ScheduleCache | None = None,
     tracer: Tracer | None = None,
     shard_sizes=None,
+    tuned_plan="auto",
 ):
     """Execute a backbone graph over a batch: (N,H,W,C) -> (N,H',W',C').
 
@@ -1175,6 +1196,14 @@ def run_graph(
     engine's replica placement — must sum to N, zeros allowed). Traces
     are placement-independent: per-image schedules and records are built
     exactly as on a single device.
+
+    With ``config.autotune`` enabled the partition and per-group tile
+    shapes come from the simulator-guided tuner (``repro.tuning``):
+    ``tuned_plan="auto"`` resolves through the plan cache per the config
+    knobs; pass a ``TunedPlan`` (or None for explicitly-greedy) to skip
+    resolution — the serving engine resolves once at construction and
+    replays the same plan on every step and replica. Executed traces
+    stay exactly equal to the DRAM simulator under any tuned plan.
     """
     if isinstance(x, jax.core.Tracer):
         raise ValueError(
@@ -1200,15 +1229,33 @@ def run_graph(
         cache: ScheduleCache | None = schedule_cache
     else:
         cache = default_schedule_cache() if cfg.use_schedule_cache else None
-    segments = partition_graph_cached(graph, cfg.onchip_budget_bytes,
-                                      dtype_bytes=x.dtype.itemsize)
-
     trace = NetworkTrace()
     n = x.shape[0]
     if n == 0:
         h, w, c = graph.out_shape
         y = jnp.zeros((0, h, w, c), x.dtype)
         return (y, trace) if return_trace else y
+
+    # "auto": resolve per cfg.autotune (cache-through; "offline" may pay
+    # a search on first use). Callers that already hold a plan — the
+    # serving engine resolves once at construction — pass it (or None
+    # for explicitly-greedy) so the hot path never re-resolves.
+    if tuned_plan == "auto":
+        tuned_plan = None
+        if cfg.autotune != "off":
+            from repro.tuning import resolve_tuned_plan
+            tuned_plan = resolve_tuned_plan(
+                convs, graph, autotune=cfg.autotune,
+                onchip_budget_bytes=cfg.onchip_budget_bytes,
+                dtype_bytes=x.dtype.itemsize, tile_hw=cfg.tile_hw,
+                buffer_tiles=cfg.buffer_tiles, schedule=cfg.schedule,
+                batch=n, budget=cfg.autotune_budget,
+                plan_cache_dir=cfg.plan_cache_dir,
+                max_displacement=max_displacement, tracer=tr)
+    segments = partition_graph_cached(graph, cfg.onchip_budget_bytes,
+                                      dtype_bytes=x.dtype.itemsize,
+                                      autotune=cfg.autotune,
+                                      tuned=tuned_plan)
 
     mesh = resolve_shard_mesh(cfg.mesh, cfg.data_parallel)
     if shard_sizes is not None and mesh is None:

@@ -183,6 +183,13 @@ def validate_dispatch_config(cfg) -> None:
         raise ValueError(
             "mesh=/data_parallel= sharding only applies to "
             f"dispatch='batch_fused', got dispatch={cfg.dispatch!r}")
+    if cfg.autotune not in ("off", "offline", "cached-only"):
+        raise ValueError(
+            f"autotune must be 'off', 'offline' or 'cached-only', "
+            f"got {cfg.autotune!r}")
+    if cfg.autotune_budget < 1:
+        raise ValueError(
+            f"autotune_budget must be >= 1, got {cfg.autotune_budget}")
 
 
 def clamp_tile_config(cfg, h: int, w: int):
@@ -233,6 +240,14 @@ class PipelineConfig:
     # images; the only collective is the all-gather at the logits.
     mesh: Any = None
     data_parallel: int | None = None
+    # Simulator-guided tile autotuning (repro.tuning): "off" = use the
+    # configured tile; "offline" = search once per layer geometry for
+    # the (tile_h, tile_w) with the least simulated DRAM traffic and
+    # cache the winner; "cached-only" = use a cached winner, never
+    # search. plan_cache_dir persists winners across processes.
+    autotune: str = "off"
+    plan_cache_dir: str | None = None
+    autotune_budget: int = 128
     # Fault injector (repro.testing.faults.FaultInjector) — test/bench
     # only, excluded from config equality: two configs with the same
     # executor knobs are the same config.
@@ -663,6 +678,21 @@ def dcn_pipeline(
         y = jnp.zeros(x.shape[:3] + (c_out,), x.dtype)
         return (y, trace) if return_trace else y
 
+    if cfg.autotune != "off":
+        # Single layer, nothing to cut: the search degenerates to the
+        # tile shape with the least simulated DRAM (first image's
+        # coords as the representative input; winner cached per layer
+        # geometry, so later batches skip straight to it).
+        from repro.tuning import resolve_tuned_tile
+        tt = resolve_tuned_tile(
+            coords[0], h, w, c_in=int(x.shape[-1]), c_out=int(c_out),
+            kernel_size=kernel_size, autotune=cfg.autotune,
+            dtype_bytes=x.dtype.itemsize, tile_hw=(th, tw),
+            buffer_tiles=cfg.buffer_tiles, schedule=cfg.schedule,
+            budget=cfg.autotune_budget,
+            plan_cache_dir=cfg.plan_cache_dir, tracer=tr)
+        if tt is not None:
+            th, tw = tt
     grid = TileGrid(h, w, th, tw)
     tp = grid.th * grid.tw
     m = grid.num_tiles if cfg.buffer_tiles is None else cfg.buffer_tiles

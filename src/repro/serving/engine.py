@@ -425,6 +425,34 @@ class DcnServingEngine:
         self._m_allgather = self.metrics.counter(
             "serving.allgather_bytes",
             help="logits all-gather traffic of sharded steps")
+        # Plan autotuning (ISSUE 10): resolve the tuned plan ONCE at
+        # construction — cache hit (memory or plan_cache_dir disk) is
+        # free, "offline" miss pays the simulator search here rather
+        # than on the first request. Every step, replica and the
+        # degraded path replay this same plan (tuned_plan= below), so
+        # the hot path never re-resolves.
+        from repro.tuning import plan_cache_hits, resolve_tuned_plan
+        self._plan_hits = plan_cache_hits
+        self._plan_hits0 = plan_cache_hits.count
+        self.tuned_plan = None
+        self._autotune_search_s = 0.0
+        if self._step_cfg.autotune != "off":
+            sc = self._step_cfg
+            hits_before = plan_cache_hits.count
+            self.tuned_plan = resolve_tuned_plan(
+                self.params["convs"], self.net_graph,
+                autotune=sc.autotune,
+                onchip_budget_bytes=sc.onchip_budget_bytes,
+                dtype_bytes=4, tile_hw=sc.tile_hw,
+                buffer_tiles=sc.buffer_tiles, schedule=sc.schedule,
+                batch=self.n_slots, budget=sc.autotune_budget,
+                plan_cache_dir=sc.plan_cache_dir,
+                max_displacement=self.cfg.max_displacement,
+                tracer=self.tracer)
+            if (self.tuned_plan is not None
+                    and plan_cache_hits.count == hits_before):
+                # Fresh search (not a cache hit): surface its cost.
+                self._autotune_search_s = self.tuned_plan.search_s
 
     # Counter-backed views keep the pre-registry attribute API
     # (``eng.requests`` etc.) readable while the registry is the single
@@ -461,6 +489,18 @@ class DcnServingEngine:
         """Staging-watchdog failovers since this engine was constructed
         (the counter is process-wide, like ``host_schedule_builds``)."""
         return self._watchdog.count - self._watchdog0
+
+    @property
+    def plan_cache_hits(self) -> int:
+        """Tuned-plan cache hits since this engine was constructed
+        (process-wide counter, engine-relative delta — same pattern as
+        ``host_schedule_builds``)."""
+        return self._plan_hits.count - self._plan_hits0
+
+    @property
+    def tuned_groups(self) -> int:
+        """Fused groups in the active tuned plan (0 = greedy plan)."""
+        return len(self.tuned_plan.groups) if self.tuned_plan else 0
 
     def _absorb_trace(self, trace) -> None:
         """Fold one executor trace into the engine counters (caller must
@@ -505,7 +545,8 @@ class DcnServingEngine:
                              config=gcfg,
                              max_displacement=self.cfg.max_displacement,
                              return_trace=True, schedule_cache=self.cache,
-                             tracer=self.tracer)
+                             tracer=self.tracer,
+                             tuned_plan=self.tuned_plan)
         self._m_requests.inc()
         self._m_images.inc(int(x.shape[0]))
         with self._lock:
@@ -617,7 +658,8 @@ class DcnServingEngine:
             self.params["convs"], self.net_graph, xb, config=step_cfg,
             max_displacement=self.cfg.max_displacement,
             return_trace=True, schedule_cache=self.cache,
-            tracer=self.tracer, shard_sizes=shard_sizes)
+            tracer=self.tracer, shard_sizes=shard_sizes,
+            tuned_plan=self.tuned_plan)
         out = np.asarray(_apply_head(self.params, self.cfg, y,
                                      self.cfg.name == "segnet"))
         return out, trace
@@ -945,6 +987,10 @@ class DcnServingEngine:
                 "step_retries": self._m_retries.count,
                 "degraded_steps": self._m_degraded.count,
                 "watchdog_failovers": self.watchdog_failovers,
+                "autotune": self._step_cfg.autotune,
+                "plan_cache_hits": self.plan_cache_hits,
+                "autotune_search_s": self._autotune_search_s,
+                "tuned_groups": self.tuned_groups,
             }
 
     def metrics_snapshot(self) -> dict[str, Any]:
@@ -971,4 +1017,8 @@ class DcnServingEngine:
             m.gauge("serving.schedule_s").set(self.overlap.schedule_s)
             m.gauge("serving.schedule_device_frac").set(
                 self.overlap.schedule_device_frac)
+            m.gauge("serving.plan_cache_hits").set(self.plan_cache_hits)
+            m.gauge("serving.autotune_search_s").set(
+                self._autotune_search_s)
+            m.gauge("serving.tuned_groups").set(self.tuned_groups)
         return m.snapshot()
